@@ -1,0 +1,30 @@
+"""Shared benchmark helpers: timing + the required CSV emitter."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        r = fn(*args)
+    _block(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    _block(r)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _block(r):
+    try:
+        import jax
+
+        jax.block_until_ready(r)
+    except Exception:
+        pass

@@ -1,0 +1,52 @@
+"""Paper Figs. 2-3: normalized objective vs iteration count for the three
+rounding schemes (deterministic / stochastic 50-50 / stochastic) at several
+precisions, improved formulation, Tabu solver (simulation methodology of
+Sec. IV-A), plus the random-selection baseline."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SolveConfig, solve_es
+from repro.core.metrics import normalized_objective, reference_bounds
+from repro.data.synthetic import benchmark_suite
+from benchmarks.common import emit
+
+SCHEMES = ("deterministic", "stochastic_5050", "stochastic")
+
+
+def run(n_benchmarks: int = 6, iters: int = 12, sizes=((20, 6), (10, 4)),
+        bits_list=(4, 6)):
+    for n, m in sizes:
+        suite = benchmark_suite(n_benchmarks, n, m, lam=0.5)
+        bounds = [reference_bounds(p) for p in suite]
+        for bits in bits_list:
+            for scheme in SCHEMES:
+                curves = []
+                t0 = time.perf_counter()
+                for i, (p, b) in enumerate(zip(suite, bounds)):
+                    cfg = SolveConfig(
+                        solver="tabu", formulation="improved", rounding=scheme,
+                        bits=bits, int_range=None, iterations=iters, reads=4,
+                    )
+                    rep = solve_es(p, jax.random.key(2000 + i), cfg)
+                    curves.append(normalized_objective(rep.curve, b))
+                c = np.mean(curves, axis=0)
+                us = (time.perf_counter() - t0) / (n_benchmarks * iters) * 1e6
+                emit(
+                    f"fig23/n{n}/{bits}bit/{scheme}", us,
+                    f"iter1={c[0]:.4f};iter4={c[3]:.4f};iter{iters}={c[-1]:.4f}",
+                )
+        # random baseline (no Ising solve)
+        curves = []
+        t0 = time.perf_counter()
+        for i, (p, b) in enumerate(zip(suite, bounds)):
+            cfg = SolveConfig(solver="random", iterations=iters)
+            rep = solve_es(p, jax.random.key(3000 + i), cfg)
+            curves.append(normalized_objective(rep.curve, b))
+        c = np.mean(curves, axis=0)
+        us = (time.perf_counter() - t0) / (n_benchmarks * iters) * 1e6
+        emit(f"fig23/n{n}/random", us, f"iter1={c[0]:.4f};iter{iters}={c[-1]:.4f}")

@@ -1,0 +1,86 @@
+"""Paper Supplementary Materials:
+
+  * 7/8-bit precision rows for the formulation comparison ("closer to FP").
+  * Multiplicity of optima: "a nonnegligible fraction of these quantized
+    formulations admit two or more equivalent optima" (Sec. IV-A) -- the
+    motivation for iterative stochastic rounding.  We count exact degenerate
+    global optima by full enumeration of the unconstrained QUBO.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    SolveConfig,
+    improved_ising,
+    quantize_ising,
+    solve_es,
+)
+from repro.core.formulation import qubo_improved
+from repro.core.metrics import normalized_objective, reference_bounds
+from repro.data.synthetic import benchmark_suite, synthetic_benchmark
+from benchmarks.common import emit
+
+
+def _count_global_optima(h, j, tol=1e-6):
+    """Exact count of degenerate minima of an Ising instance (N <= 18)."""
+    n = len(h)
+    hn = np.asarray(h, np.float64)
+    jn = np.asarray(j, np.float64)
+    idx = np.arange(2**n, dtype=np.int64)
+    best, count = np.inf, 0
+    for start in range(0, 2**n, 1 << 14):
+        chunk = idx[start : start + (1 << 14)]
+        s = np.where((chunk[:, None] >> np.arange(n)[None, :]) & 1, 1.0, -1.0)
+        e = np.einsum("ri,ri->r", s @ jn, s) + s @ hn
+        m = e.min()
+        if m < best - tol:
+            best, count = m, int((e <= m + tol).sum())
+        elif m <= best + tol:
+            count += int((e <= best + tol).sum())
+    return best, count
+
+
+def run(n_benchmarks: int = 6, n: int = 14, m: int = 5):
+    # --- 7/8-bit rows (supplementary: "closer to FP") ---
+    suite = benchmark_suite(n_benchmarks, 20, 6, lam=0.5)
+    bounds = [reference_bounds(p) for p in suite]
+    for form in ("original", "improved"):
+        for bits in (7, 8):
+            scores = []
+            t0 = time.perf_counter()
+            for i, (p, b) in enumerate(zip(suite, bounds)):
+                cfg = SolveConfig(
+                    solver="tabu", formulation=form, rounding="deterministic",
+                    bits=bits, int_range=None, iterations=1, reads=8,
+                )
+                rep = solve_es(p, jax.random.key(7000 + i), cfg)
+                scores.append(float(normalized_objective(rep.objective, b)))
+            us = (time.perf_counter() - t0) / n_benchmarks * 1e6
+            emit(f"supp/{form}/{bits}bit", us,
+                 f"norm_obj_mean={np.mean(scores):.4f}")
+
+    # --- multiplicity of optima under quantization ---
+    t0 = time.perf_counter()
+    multi_fp, multi_q = 0, 0
+    counts_q = []
+    for seed in range(n_benchmarks):
+        p = synthetic_benchmark(seed, n, m, lam=0.5)
+        isg = improved_ising(p)
+        _, c_fp = _count_global_optima(isg.h, isg.j)
+        qz = quantize_ising(isg, "deterministic", int_range=14)
+        _, c_q = _count_global_optima(qz.ising.h, qz.ising.j)
+        multi_fp += c_fp > 1
+        multi_q += c_q > 1
+        counts_q.append(c_q)
+    us = (time.perf_counter() - t0) / n_benchmarks * 1e6
+    emit(
+        "supp/optima_multiplicity", us,
+        f"frac_degenerate_fp={multi_fp / n_benchmarks:.2f};"
+        f"frac_degenerate_quantized={multi_q / n_benchmarks:.2f};"
+        f"mean_optima_quantized={np.mean(counts_q):.2f}",
+    )

@@ -1,0 +1,83 @@
+"""Paper Table I + Figs. 7-8: TTS and ETS for COBI / brute-force / Tabu.
+
+Methodology exactly as Sec. V: per-benchmark first-success iteration at
+normalized objective >= 0.9, MLE geometric success probability (Eq. 14),
+TTS at p_target = 0.95 (Eq. 15) with per-iteration hardware costs, ETS from
+solver + host-eval power (Eq. 16).  Hardware constants from the paper:
+COBI 200us/solve @25mW, Tabu 25ms @20W, eval 18.9us @20W."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SolveConfig, solve_es
+from repro.core.hardware import COBI, TABU_CPU, brute_hardware
+from repro.core.metrics import (
+    ets_joules,
+    first_success_iteration,
+    normalized_objective,
+    reference_bounds,
+    success_probability,
+    tts_seconds,
+)
+from repro.data.synthetic import benchmark_suite
+from repro.solvers import brute
+from benchmarks.common import emit
+
+THRESH = 0.9
+
+
+def _iteration_curves(suite, bounds, cfg_kw, iters, seed0):
+    firsts, wall = [], []
+    for i, (p, b) in enumerate(zip(suite, bounds)):
+        cfg = SolveConfig(formulation="improved", iterations=iters, **cfg_kw)
+        t0 = time.perf_counter()
+        rep = solve_es(p, jax.random.key(seed0 + i), cfg)
+        wall.append(time.perf_counter() - t0)
+        curve = normalized_objective(rep.curve, b)
+        firsts.append(first_success_iteration(curve, THRESH))
+    return firsts, float(np.mean(wall))
+
+
+def run(n_benchmarks: int = 5, iters: int = 20, sizes=(20, 50)):
+    for n in sizes:
+        m = 6
+        decompose = n > 20
+        suite = benchmark_suite(n_benchmarks, n, m, lam=0.5)
+        bounds = [reference_bounds(x) for x in suite]
+
+        rows = {}
+        # COBI and Tabu via iterative stochastic rounding
+        for name, kw, hw in (
+            ("cobi", dict(solver="cobi", int_range=14, rounding="stochastic",
+                          reads=8, steps=300, decompose=decompose, p=20, q=10), COBI),
+            ("tabu", dict(solver="tabu", int_range=14, rounding="stochastic",
+                          reads=8, decompose=decompose, p=20, q=10), TABU_CPU),
+        ):
+            firsts, wall = _iteration_curves(suite, bounds, kw, iters, 6000)
+            p_hat = success_probability(firsts)
+            rows[name] = (
+                tts_seconds(p_hat, hw), ets_joules(p_hat, hw), p_hat, wall
+            )
+        # Brute force: exact in one 'iteration'; TTS = enumeration time.
+        candidates = brute.num_candidates(min(n, 20), 10 if n > 20 else m)
+        n_subsolves = max(1, (n - 10) // 10) if n > 20 else 1
+        hw_b = brute_hardware(candidates * n_subsolves)
+        rows["brute"] = (hw_b.seconds_per_solve, hw_b.seconds_per_solve * 20.0, 1.0, 0.0)
+
+        for name, (tts, ets_, p_hat, wall) in rows.items():
+            emit(
+                f"tts_ets/n{n}/{name}", wall * 1e6,
+                f"tts_ms={tts * 1e3:.3f};ets_mj={ets_ * 1e3:.4f};p_success={p_hat:.3f}",
+            )
+        t_c, e_c = rows["cobi"][0], rows["cobi"][1]
+        emit(
+            f"tts_ets/n{n}/speedups", 0.0,
+            f"tts_vs_brute={rows['brute'][0] / t_c:.2f}x;"
+            f"tts_vs_tabu={rows['tabu'][0] / t_c:.2f}x;"
+            f"ets_vs_brute_orders={np.log10(max(rows['brute'][1] / e_c, 1e-12)):.2f};"
+            f"ets_vs_tabu_orders={np.log10(max(rows['tabu'][1] / e_c, 1e-12)):.2f}",
+        )

@@ -1,0 +1,53 @@
+"""Quickstart: summarize a document on the simulated COBI Ising machine.
+
+Runs the complete paper pipeline on CPU in under a minute:
+  text -> sentences -> embeddings -> improved Ising formulation ->
+  stochastic rounding -> coupled-oscillator anneal -> best-of-iterations
+  -> 6-sentence summary, scored against the exact optimum.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import SolveConfig, solve_es
+from repro.core.metrics import normalized_objective, reference_bounds
+from repro.data.synthetic import synthetic_document
+from repro.embeddings import problem_from_sentences
+
+
+def main():
+    sentences = synthetic_document(seed=7, n_sentences=20)
+    print("Document:")
+    for i, s in enumerate(sentences):
+        print(f"  [{i:2d}] {s}")
+
+    problem = problem_from_sentences(sentences, m=6, lam=0.5)
+    print(f"\nIsing instance: {problem.n} spins (dense all-to-all), M={problem.m}")
+
+    cfg = SolveConfig(
+        solver="cobi",        # coupled-oscillator simulator (Pallas kernel)
+        formulation="improved",  # paper Eq. (11)+(12)
+        rounding="stochastic",   # paper Sec. IV-A
+        int_range=14,            # COBI native [-14, +14]
+        iterations=8,
+        reads=8,
+    )
+    report = solve_es(problem, jax.random.key(0), cfg)
+
+    print("\nSummary (COBI, integer couplings in [-14, 14]):")
+    for i in np.nonzero(report.selection)[0]:
+        print(f"  [{i:2d}] {sentences[i]}")
+
+    bounds = reference_bounds(problem)
+    score = normalized_objective(report.objective, bounds)
+    print(f"\nFP objective: {report.objective:.4f}")
+    print(f"Normalized objective vs exact optimum (Eq. 13): {float(score):.4f}")
+    print(f"Solver invocations: {report.solver_invocations} "
+          f"(~{report.solver_invocations * 8 * 200e-6 * 1e3:.1f} ms on-chip, "
+          f"~{report.solver_invocations * 8 * 200e-6 * 25e-3 * 1e6:.1f} uJ)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""minitron-8b [dense]: 32L d4096 32H (GQA kv=8) d_ff 16384 vocab 256000;
+pruned nemotron -> squared-ReLU ungated MLP.  [arXiv:2407.14679]."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="minitron-8b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab_size=256000,
+        act="relu2",
+        gated_mlp=False,
+        max_seq_len=32768,
+        microbatch=4,
+    )
+)

@@ -1,0 +1,87 @@
+"""Decomposition of a large ES problem into COBI-sized subproblems (Fig. 4, C4).
+
+While the working paragraph has more than P sentences: take the window of P
+consecutive sentences starting at the cursor (wrapping around the end),
+summarize it to Q sentences with the provided sub-solver, replace the window
+by its Q survivors (document order preserved), and move the cursor to just
+after the window.  When <= P sentences remain, one final solve produces the
+M-sentence summary.
+
+The sub-solver is a callback ``solve(problem: EsProblem, m: int, key) -> x``
+so the same driver runs COBI, Tabu, brute force, or the exact reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+from repro.core.formulation import EsProblem
+
+SubSolver = Callable[[EsProblem, int, jax.Array], np.ndarray]
+
+
+@dataclasses.dataclass
+class DecompositionTrace:
+    """One entry per sub-solve: (window indices, kept indices)."""
+
+    windows: List[np.ndarray]
+    kept: List[np.ndarray]
+    num_solves: int = 0
+
+
+def window_indices(length: int, start: int, p: int) -> np.ndarray:
+    """P consecutive positions from ``start`` with wrap-around."""
+    return (start + np.arange(p)) % length
+
+
+def decompose_solve(
+    problem: EsProblem,
+    solve: SubSolver,
+    key: jax.Array,
+    *,
+    p: int = 20,
+    q: int = 10,
+) -> tuple[np.ndarray, DecompositionTrace]:
+    """Returns (selection x over the ORIGINAL N sentences, trace)."""
+    if q >= p:
+        raise ValueError(f"need q < p, got p={p} q={q}")
+    if q < problem.m:
+        raise ValueError(
+            f"intermediate summaries of q={q} cannot reach final m={problem.m}"
+        )
+    alive = np.arange(problem.n)  # original indices, document order
+    cursor = 0
+    trace = DecompositionTrace(windows=[], kept=[])
+
+    while alive.size > p:
+        key, sub = jax.random.split(key)
+        pos = window_indices(alive.size, cursor, p)
+        window = alive[np.sort(pos)]  # window in document order
+        subproblem = problem.subproblem(window)
+        x = np.asarray(solve(subproblem, q, sub))
+        keep_local = np.nonzero(x)[0]
+        trace.windows.append(window)
+        trace.kept.append(window[keep_local])
+        trace.num_solves += 1
+        drop = set(window[np.setdiff1d(np.arange(p), keep_local)].tolist())
+        # Cursor: first position after the window, in the NEW list's coords.
+        end_pos = int(pos[-1])
+        after = alive[(end_pos + 1) % alive.size] if alive.size else 0
+        alive = np.array([i for i in alive if i not in drop], dtype=np.int64)
+        nxt = np.nonzero(alive == after)[0]
+        cursor = int(nxt[0]) if nxt.size else 0
+
+    key, sub = jax.random.split(key)
+    subproblem = problem.subproblem(alive)
+    x = np.asarray(solve(subproblem, problem.m, sub))
+    trace.windows.append(alive)
+    trace.kept.append(alive[np.nonzero(x)[0]])
+    trace.num_solves += 1
+
+    selection = np.zeros(problem.n, np.int32)
+    selection[trace.kept[-1]] = 1
+    return selection, trace

@@ -1,0 +1,167 @@
+"""End-to-end ES solve pipeline (paper Sec. V): improved formulation ->
+stochastic rounding -> integer Ising -> solver (COBI / Tabu / SA) ->
+best-of-iterations under the FP objective -> optional decomposition driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decomposition as decomp
+from repro.core.formulation import (
+    EsProblem,
+    IsingProblem,
+    es_objective,
+    improved_ising,
+    original_ising,
+    spins_to_selection,
+)
+from repro.core.rounding import COBI_RANGE, quantize_ising
+from repro.solvers import cobi as cobi_solver
+from repro.solvers import sa as sa_solver
+from repro.solvers import tabu as tabu_solver
+from repro.solvers import brute as brute_solver
+from repro.solvers import random_baseline
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Knobs of the hardware-aware ES pipeline."""
+
+    solver: str = "cobi"  # cobi | tabu | sa | brute | random | exact
+    formulation: str = "improved"  # improved | original
+    rounding: str = "stochastic"  # deterministic | stochastic_5050 | stochastic
+    int_range: Optional[int] = COBI_RANGE  # None -> no quantization (FP solve)
+    bits: Optional[int] = None  # overrides int_range when set
+    iterations: int = 10  # solver invocations (paper's definition)
+    reads: int = 8  # anneals / restarts per invocation
+    gamma: Optional[float] = None  # None -> gamma_auto
+    repair: bool = True  # greedy-repair cardinality before evaluating
+    steps: int = 400  # COBI anneal steps
+    decompose: bool = False
+    p: int = 20
+    q: int = 10
+
+
+@dataclasses.dataclass
+class SolveReport:
+    selection: np.ndarray  # (N,) {0,1}
+    objective: float  # FP Eq. (3) objective of `selection`
+    curve: np.ndarray  # best-so-far FP objective after each iteration
+    solver_invocations: int
+
+
+def repair_selection(problem: EsProblem, x: np.ndarray) -> np.ndarray:
+    """Greedy add/remove to reach cardinality M (marginal-gain ordered)."""
+    x = np.asarray(x, np.int32).copy()
+    mu = np.asarray(problem.mu, np.float64)
+    beta = np.asarray(problem.beta, np.float64)
+    lam = problem.lam
+    red = beta @ x  # sum_{j in S} beta_ij  (beta has zero diagonal)
+    while int(x.sum()) > problem.m:
+        # Remove the selected sentence with the smallest marginal contribution
+        # (its removal gains 2*lam*red_i and loses mu_i).
+        contrib = np.where(x > 0, mu - 2.0 * lam * red, np.inf)
+        i = int(np.argmin(contrib))
+        x[i] = 0
+        red -= beta[:, i]
+    while int(x.sum()) < problem.m:
+        gain = np.where(x > 0, -np.inf, mu - 2.0 * lam * red)
+        i = int(np.argmax(gain))
+        x[i] = 1
+        red += beta[:, i]
+    return x
+
+
+def _build_ising(problem: EsProblem, cfg: SolveConfig) -> IsingProblem:
+    if cfg.formulation == "improved":
+        return improved_ising(problem, gamma=cfg.gamma)
+    if cfg.formulation == "original":
+        return original_ising(problem, gamma=cfg.gamma)
+    raise ValueError(f"unknown formulation {cfg.formulation!r}")
+
+
+def _invoke(ising: IsingProblem, cfg: SolveConfig, key: Array):
+    if cfg.solver == "cobi":
+        return cobi_solver.solve(
+            ising, key, reads=cfg.reads, steps=cfg.steps,
+            check=cfg.int_range is not None or cfg.bits is not None,
+        )
+    if cfg.solver == "tabu":
+        return tabu_solver.solve(ising, key, replicas=cfg.reads)
+    if cfg.solver == "sa":
+        return sa_solver.solve(ising, key, replicas=cfg.reads)
+    raise ValueError(f"unknown Ising solver {cfg.solver!r}")
+
+
+def solve_es(
+    problem: EsProblem, key: Array, cfg: SolveConfig = SolveConfig()
+) -> SolveReport:
+    """Solve one ES instance per the paper's iterative workflow (Sec. IV-A)."""
+    if cfg.decompose:
+        return _solve_decomposed(problem, key, cfg)
+    if cfg.solver == "brute":
+        x, obj, count = brute_solver.brute_force_select(problem)
+        return SolveReport(x.astype(np.int32), obj, np.array([obj]), count)
+    if cfg.solver == "exact":
+        obj, x, _, _ = brute_solver.exact_constrained_bounds(problem)
+        return SolveReport(x.astype(np.int32), obj, np.array([obj]), 1)
+    if cfg.solver == "random":
+        best_x, objs = random_baseline.solve(problem, key, cfg.iterations)
+        curve = np.maximum.accumulate(np.asarray(objs))
+        return SolveReport(
+            np.asarray(best_x, np.int32), float(curve[-1]), curve, cfg.iterations
+        )
+
+    ising_fp = _build_ising(problem, cfg)
+    best_x, best_obj, curve = None, -np.inf, []
+    for it in range(cfg.iterations):
+        key, k_quant, k_solve = jax.random.split(key, 3)
+        if cfg.int_range is None and cfg.bits is None:
+            inst = ising_fp
+        else:
+            inst = quantize_ising(
+                ising_fp, cfg.rounding, int_range=cfg.int_range or COBI_RANGE,
+                bits=cfg.bits, key=k_quant,
+            ).ising
+        result = _invoke(inst, cfg, k_solve)
+        spins, _ = result.best()
+        x = np.asarray(spins_to_selection(spins))
+        if cfg.repair:
+            x = repair_selection(problem, x)
+        obj = float(es_objective(problem, jnp.asarray(x)))
+        if obj > best_obj:
+            best_obj, best_x = obj, x
+        curve.append(best_obj)
+    return SolveReport(best_x, best_obj, np.asarray(curve), cfg.iterations)
+
+
+def make_subsolver(cfg: SolveConfig) -> decomp.SubSolver:
+    """Adapter: run the iterative pipeline on a decomposition subproblem."""
+
+    def solve(sub: EsProblem, m: int, key: Array) -> np.ndarray:
+        sub_cfg = dataclasses.replace(cfg, decompose=False)
+        report = solve_es(sub.with_m(m), key, sub_cfg)
+        return report.selection
+
+    return solve
+
+
+def _solve_decomposed(problem: EsProblem, key: Array, cfg: SolveConfig) -> SolveReport:
+    k_dec, _ = jax.random.split(key)
+    selection, trace = decomp.decompose_solve(
+        problem, make_subsolver(cfg), k_dec, p=cfg.p, q=cfg.q
+    )
+    if cfg.repair:
+        selection = repair_selection(problem, selection)
+    obj = float(es_objective(problem, jnp.asarray(selection)))
+    return SolveReport(
+        selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations
+    )

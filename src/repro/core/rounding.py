@@ -1,0 +1,108 @@
+"""Quantization / rounding of Ising coefficients (paper Sec. IV-A, C3).
+
+COBI supports integer couplings ``h_i, J_ij in [-14, +14]``.  The paper
+simulates b-bit fixed point by quantizing to ``[-(2^(b-1)-1), 2^(b-1)-1]``.
+A single scale factor maps the joint (h, J) range onto the integer range --
+this is exactly where the h-vs-J scale imbalance destroys coupling
+resolution, and what the improved formulation (C2) mitigates.
+
+Three rounding schemes (paper Sec. IV-A):
+  * ``deterministic``      -- round to nearest.
+  * ``stochastic_5050``    -- floor/ceil with probability 1/2 each.
+  * ``stochastic``         -- floor + Bernoulli(frac)  (unbiased SR, [17]).
+
+J is rounded on the upper triangle and mirrored so it stays symmetric, as on
+the chip (one physical coupler per spin pair).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formulation import IsingProblem
+
+Array = jax.Array
+
+COBI_RANGE = 14  # native integer coupling range of the COBI chip
+SCHEMES = ("deterministic", "stochastic_5050", "stochastic")
+
+
+def int_range_for_bits(bits: int) -> int:
+    """Symmetric integer range for a b-bit signed fixed-point format."""
+    if bits < 2:
+        raise ValueError(f"need >=2 bits, got {bits}")
+    return 2 ** (bits - 1) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedIsing:
+    """An integer-coefficient Ising instance plus its scale back to FP."""
+
+    ising: IsingProblem  # integer-valued h, J (stored as float32)
+    scale: float  # fp_coeff ~= int_coeff / scale
+
+
+def joint_scale(ising: IsingProblem, int_range: int) -> float:
+    """Single scale mapping max(|h|, |J|) onto the integer range."""
+    m = jnp.maximum(jnp.max(jnp.abs(ising.h)), jnp.max(jnp.abs(ising.j)))
+    m = jnp.maximum(m, 1e-12)
+    return float(int_range / m)
+
+
+def _round(v: Array, scheme: str, key: Optional[Array]) -> Array:
+    if scheme == "deterministic":
+        return jnp.round(v)
+    if key is None:
+        raise ValueError(f"scheme {scheme!r} needs a PRNG key")
+    lo = jnp.floor(v)
+    frac = v - lo
+    if scheme == "stochastic_5050":
+        # Integer-valued entries stay put; otherwise 50/50 floor vs ceil.
+        p_up = jnp.where(frac > 0.0, 0.5, 0.0)
+    elif scheme == "stochastic":
+        p_up = frac
+    else:
+        raise ValueError(f"unknown rounding scheme {scheme!r}; want one of {SCHEMES}")
+    up = jax.random.uniform(key, v.shape) < p_up
+    return lo + up.astype(v.dtype)
+
+
+def quantize_ising(
+    ising: IsingProblem,
+    scheme: str = "stochastic",
+    *,
+    int_range: int = COBI_RANGE,
+    bits: Optional[int] = None,
+    key: Optional[Array] = None,
+) -> QuantizedIsing:
+    """Quantize (h, J) to integers in [-R, R] with the given rounding scheme.
+
+    ``bits`` overrides ``int_range`` with the b-bit fixed-point range.
+    Returns integer-valued coefficients and the scale used, so that
+    ``H_int(s) / scale ~= H_fp(s)``.
+    """
+    if bits is not None:
+        int_range = int_range_for_bits(bits)
+    scale = joint_scale(ising, int_range)
+    n = ising.n
+    h = jnp.asarray(ising.h, jnp.float32) * scale
+    j = jnp.asarray(ising.j, jnp.float32) * scale
+
+    if key is None and scheme != "deterministic":
+        raise ValueError(f"scheme {scheme!r} needs a PRNG key")
+    kh = kj = None
+    if key is not None:
+        kh, kj = jax.random.split(key)
+
+    h_q = jnp.clip(_round(h, scheme, kh), -int_range, int_range)
+    # Round the strict upper triangle once, mirror for symmetry.
+    upper = jnp.triu(jnp.ones((n, n), bool), k=1)
+    j_up = _round(j, scheme, kj)
+    j_q = jnp.where(upper, j_up, 0.0)
+    j_q = j_q + j_q.T
+    j_q = jnp.clip(j_q, -int_range, int_range)
+    return QuantizedIsing(ising=IsingProblem(h=h_q, j=j_q), scale=scale)

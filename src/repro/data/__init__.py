@@ -1,0 +1,1 @@
+from repro.data import synthetic, text  # noqa: F401

@@ -1,0 +1,68 @@
+"""Ambient mesh context for activation sharding constraints.
+
+The 2-D FSDP x TP weight sharding only yields the intended program if
+activations are pinned to batch-sharding at layer boundaries -- otherwise
+GSPMD resolves the embedding's 'data' axis onto the feature dim and
+replicates the batch (observed: every chip ran the full global batch).
+Model code calls constrain(x, ...) with LOGICAL axes; outside a mesh context
+it is a no-op, so single-device tests and examples are unaffected.
+
+Logical axes: "batch" -> ("pod","data") (as present), "model" -> "model".
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    token = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint with logical axis names; no-op without mesh.
+
+    axes entries: "batch", "model", None.  Axes whose size does not divide
+    the dim are dropped (uneven cases are left to GSPMD propagation).
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    import numpy as np
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    spec = []
+    for dim, a in enumerate(axes):
+        if a == "batch":
+            names = dp
+        elif a == "model":
+            names = ("model",)
+        elif a is None:
+            spec.append(None)
+            continue
+        else:
+            names = (a,)
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        if x.shape[dim] % size != 0:
+            spec.append(None)
+        else:
+            spec.append(names if len(names) > 1 else names[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,184 @@
+"""Sharding rules: 2-D FSDP x TP weight sharding + pod/data batch sharding.
+
+Weights:  (in_dim, out_dim) matmuls shard P('data', 'model') (column-parallel)
+or P('model', 'data') (row-parallel: wo / w_out / out_proj), so FSDP gathers
+restore only the 'data' factor just-in-time inside the layer scan while the
+'model' factor stays resident (Megatron-style TP).  Stacked scan leading dims
+(groups, inner stacks, experts) are replicated (None-padded on the left).
+
+Dims that don't divide the axis (40 heads / MoE expert counts / kv=8 over 16)
+rely on GSPMD uneven-partition padding under jax.jit -- legal and visible in
+cost_analysis (DESIGN.md sec. 5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Base spec per trailing param name (padded with None on the left per-rank).
+_COL = ("data", "model")  # column-parallel: out-dim TP
+_ROW = ("model", "data")  # row-parallel: in-dim TP
+PARAM_RULES = {
+    "wq": _COL, "wk": _COL, "wv": _COL,
+    "wo": _ROW,
+    "w_in": _COL, "w_gate": _COL,
+    "w_out": _ROW,
+    "in_proj": _COL, "out_proj": _ROW,
+    "ffn_in": _COL, "ffn_out": _ROW,
+    "w_gates": ("data", None),
+    "router": ("data", None),
+    "shared_gate": ("data", None),
+    "embed": ("model", "data"),
+    "unembed": ("data", "model"),
+    "conv_w": (None, "model"),
+    "r": (None, None, "model"),  # slstm recurrent (nh, dh, 4dh)
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "bias": ("model",),
+    # replicated small leaves:
+    "scale": (), "gate": (), "ffn_gate": (), "a_log": (), "d_skip": (),
+    "dt_bias": (), "gate_bias": (),
+}
+
+# KV cache layout: "heads" shards kv-heads over model (classic TP) but
+# REPLICATES the cache when n_kv_heads < model axis (GQA kv=8 on 16-way TP
+# blew past HBM: 69 GB/chip for qwen2.5 decode_32k).  "seq" shards the cache
+# sequence dim over model instead (context-parallel attention: GSPMD inserts
+# partial-softmax reductions).  "auto" picks per-config.
+KV_CACHE_LAYOUT = "auto"
+
+# Cache leaves (by name) -- batch on data axes, heads/features on model.
+CACHE_RULES = {
+    "k": ("batch", None, "model", None),
+    "v": ("batch", None, "model", None),
+    "k_seq": ("batch", "model", None, None),
+    "v_seq": ("batch", "model", None, None),
+    "pos": (),
+    "conv": ("batch", None, "model"),
+    "state": ("batch", "model", None, None),  # mamba (B,H,N,P) / mlstm heads
+    "c": ("batch", "model"), "n": ("batch", "model"),
+    "h": ("batch", "model"), "m": ("batch", "model"),
+    "memory": ("batch", None, None),
+}
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _pad_spec(base, rank: int, mesh: Mesh, batch_axes, shape=None) -> P:
+    base = tuple(batch_axes if a == "batch" else a for a in base)
+    pad = rank - len(base)
+    assert pad >= 0, (base, rank)
+    spec = list((None,) * pad + base)
+    if shape is not None:
+        # Explicit in_shardings must divide exactly; drop axes that don't
+        # (e.g. 4 mLSTM heads over model=16 -> replicate that dim).
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if shape[i] % size != 0:
+                spec[i] = None
+    return P(*spec)
+
+
+def param_sharding(params: PyTree, mesh: Mesh, *, serve: bool = False) -> PyTree:
+    """NamedSharding tree for a model/optimizer param pytree.
+
+    serve=True drops the FSDP ('data') factor from weights: at inference there
+    is no optimizer state, so TP-only weights fit HBM and the per-layer
+    weight all-gathers disappear from the decode step (they otherwise
+    dominate decode collectives -- see EXPERIMENTS.md section Perf).
+    """
+    batch = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        base = PARAM_RULES.get(name)
+        if base is None:
+            base = ()  # unknown -> replicated (safe default)
+        if serve:
+            base = tuple(None if a == "data" else a for a in base)
+        if len(base) > leaf.ndim:
+            base = base[-leaf.ndim:] if leaf.ndim else ()
+        return NamedSharding(
+            mesh, _pad_spec(base, leaf.ndim, mesh, batch, shape=leaf.shape)
+        )
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def cache_sharding(cache: PyTree, mesh: Mesh, *, n_kv_heads: int = 0) -> PyTree:
+    batch = dp_axes(mesh)
+    model = mesh.shape.get("model", 1)
+    seq_layout = KV_CACHE_LAYOUT == "seq" or (
+        KV_CACHE_LAYOUT == "auto" and n_kv_heads and n_kv_heads % model != 0
+    )
+
+    def spec(path, leaf):
+        names = [e.key for e in path if isinstance(e, jax.tree_util.DictKey)]
+        name = names[-1] if names else None
+        if seq_layout and name in ("k", "v"):
+            name = name + "_seq"
+        base = CACHE_RULES.get(name, ())
+        if name == "state" and "mlstm" in names:
+            # mLSTM matrix memory (B, NH, DK, DV): NH=4 won't divide model=16;
+            # shard the key dim instead (column-parallel wq/wk match).
+            base = ("batch", None, "model", None)
+        # Cache leaves are stacked (groups, [inner], *base) -- pad left.
+        if len(base) > leaf.ndim:
+            base = base[-leaf.ndim:] if leaf.ndim else ()
+        return NamedSharding(
+            mesh, _pad_spec(base, leaf.ndim, mesh, batch, shape=leaf.shape)
+        )
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def batch_sharding(mesh: Mesh, rank: int = 2) -> NamedSharding:
+    """Token batches: (B, S, ...) shard B over (pod, data)."""
+    return NamedSharding(mesh, P(dp_axes(mesh), *([None] * (rank - 1))))
+
+
+def opt_state_sharding(opt_state: PyTree, params_sharding: PyTree, mesh: Mesh) -> PyTree:
+    """Optimizer state shardings.
+
+    master/mu/nu mirror the param shardings, but on a multi-pod mesh the
+    'data' factor widens to ('pod','data') -- ZeRO-style: optimizer state is
+    only touched once per step, so sharding it across pure-DP replicas costs
+    one cross-pod gather per step and halves its HBM footprint per pod added.
+    """
+    if "pod" in mesh.axis_names:
+        def widen(ns, leaf):
+            spec = []
+            for dim, ax in enumerate(ns.spec):
+                if ax == "data" and leaf.shape[dim] % (mesh.shape["pod"] * mesh.shape["data"]) == 0:
+                    spec.append(("pod", "data"))
+                else:
+                    spec.append(ax)
+            return NamedSharding(mesh, P(*spec))
+
+        state_sh = jax.tree.map(widen, params_sharding, opt_state["master"])
+    else:
+        state_sh = params_sharding
+    return {
+        "step": NamedSharding(mesh, P()),
+        "master": state_sh,
+        "mu": state_sh,
+        "nu": state_sh,
+    }
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,5 @@
+from repro.embeddings.encoder import (  # noqa: F401
+    BackboneEncoder,
+    HashedBowEncoder,
+    problem_from_sentences,
+)

@@ -1,0 +1,79 @@
+"""Sentence embedders feeding the Ising pipeline's mu/beta (paper Eqs. 1-2).
+
+Two interchangeable backends (DESIGN.md deviation 3):
+  * HashedBowEncoder -- deterministic hashed bag-of-words + signed random
+    projection.  Training-free, fast, good lexical-overlap redundancy signal.
+  * BackboneEncoder  -- any framework LM checkpoint; mean-pooled hidden
+    states per sentence via models.embed_sentences (the production path; its
+    embed_step is also lowered in the dry-run).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formulation import EsProblem
+from repro.data.synthetic import scores_from_embeddings
+
+_WORD_RE = re.compile(r"[a-z0-9']+")
+
+
+class HashedBowEncoder:
+    def __init__(self, dim: int = 256, seed: int = 0):
+        self.dim = dim
+        self.seed = seed
+
+    def _word_vec(self, word: str) -> np.ndarray:
+        h = hashlib.blake2b(f"{self.seed}:{word}".encode(), digest_size=8).digest()
+        rng = np.random.default_rng(int.from_bytes(h, "little"))
+        v = rng.standard_normal(self.dim)
+        return v / np.linalg.norm(v)
+
+    def encode(self, sentences: Sequence[str]) -> jnp.ndarray:
+        out = np.zeros((len(sentences), self.dim), np.float32)
+        for i, s in enumerate(sentences):
+            words = _WORD_RE.findall(s.lower())
+            for w in words:
+                out[i] += self._word_vec(w)
+            n = np.linalg.norm(out[i])
+            if n > 0:
+                out[i] /= n
+            else:
+                out[i, 0] = 1.0
+        return jnp.asarray(out)
+
+
+class BackboneEncoder:
+    """Mean-pooled hidden states from a framework LM."""
+
+    def __init__(self, cfg, params, max_len: int = 1024):
+        from repro.data.tokenizer import ByteTokenizer
+
+        self.cfg, self.params = cfg, params
+        self.tok = ByteTokenizer()
+        self.max_len = max_len
+
+    def encode(self, sentences: Sequence[str]) -> jnp.ndarray:
+        from repro.models import embed_sentences
+
+        tokens, seg_ids = self.tok.encode_sentences(list(sentences), self.max_len)
+        emb = embed_sentences(
+            self.cfg, self.params, jnp.asarray(tokens)[None],
+            jnp.asarray(seg_ids)[None], n_segments=len(sentences),
+        )[0]
+        return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-9)
+
+
+def problem_from_sentences(
+    sentences: List[str], m: int, *, lam: float = 0.5, encoder=None
+) -> EsProblem:
+    encoder = encoder or HashedBowEncoder()
+    e = encoder.encode(sentences)
+    mu, beta = scores_from_embeddings(e)
+    return EsProblem(mu=mu, beta=beta, m=m, lam=lam)

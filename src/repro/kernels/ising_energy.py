@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: batched Ising energy  E_r = h.s_r + s_r^T J s_r.
+
+This is the paper's per-iteration FP objective evaluation (18.9 us/iteration
+on their host CPU) as a bilinear-form kernel: one (BR,N)@(N,N) MXU matmul per
+replica block with J resident in VMEM, then an elementwise multiply-reduce.
+Outputs are written as (BR, LANE) tiles with the energy broadcast across the
+lane dim; ops.py slices column 0 (keeps the store layout tile-aligned).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 128
+DEFAULT_REPLICA_BLOCK = 512
+
+
+def _energy_kernel(s_ref, h_ref, j_ref, out_ref):
+    s = s_ref[...]  # (BR, N) in {-1, 0, +1}; 0 = padding column
+    h = h_ref[...]  # (1, N)
+    j = j_ref[...]  # (N, N)
+    sj = jnp.dot(s, j, preferred_element_type=jnp.float32)  # MXU
+    e = jnp.sum(s * sj, axis=-1, keepdims=True) + jnp.sum(s * h, axis=-1, keepdims=True)
+    out_ref[...] = jnp.broadcast_to(e, out_ref.shape)
+
+
+def ising_energy_pallas(
+    spins: Array,  # (R, N) f32 in {-1, 0, +1}; R % BR == 0, N % LANE == 0
+    h: Array,  # (1, N)
+    j: Array,  # (N, N)
+    *,
+    replica_block: int = DEFAULT_REPLICA_BLOCK,
+    interpret: bool = False,
+) -> Array:
+    r, n = spins.shape
+    assert n % LANE == 0 and r % replica_block == 0
+    grid = (r // replica_block,)
+    out = pl.pallas_call(
+        _energy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((replica_block, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((replica_block, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, LANE), jnp.float32),
+        interpret=interpret,
+    )(spins.astype(jnp.float32), h.astype(jnp.float32), j.astype(jnp.float32))
+    return out[:, 0]

@@ -1,0 +1,124 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: pad shapes to TPU tiles (lanes of 128, replica blocks),
+pre-scale coefficients, pick interpret mode on CPU, and expose clean
+functional APIs.  ``impl`` may be:
+
+  * "pallas"  -- the Pallas kernel (interpret=True automatically on CPU);
+  * "ref"     -- the pure-jnp oracle (also the grad-friendly path);
+  * "auto"    -- pallas with interpret on CPU, compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.kernels.cobi_dynamics import LANE, cobi_trajectory_pallas
+from repro.kernels.ising_energy import ising_energy_pallas
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def dynamics_scale(h: Array, j: Array) -> Array:
+    """Normalizer so one Euler step moves phases by O(dt)."""
+    denom = 2.0 * jnp.max(jnp.sum(jnp.abs(j), axis=-1)) + jnp.max(jnp.abs(h))
+    return jnp.maximum(denom, 1e-9)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("replicas", "steps", "dt", "ks_max", "impl", "replica_block")
+)
+def cobi_anneal(
+    h: Array,
+    j: Array,
+    key: Array,
+    *,
+    replicas: int = 256,
+    steps: int = 300,
+    dt: float = 0.35,
+    ks_max: float = 1.0,
+    impl: str = "auto",
+    replica_block: int = 256,
+) -> Tuple[Array, Array]:
+    """Anneal ``replicas`` independent oscillator networks.
+
+    Returns (spins (R, N) int8 in {-1,+1}, energies (R,) f32 of the *given*
+    integer/FP problem).  Deterministic given ``key``.
+    """
+    n = h.shape[-1]
+    scale = dynamics_scale(h, j)
+    j_s = jnp.asarray(j, jnp.float32) / scale
+    h_s = jnp.asarray(h, jnp.float32) / scale
+
+    n_pad = _pad_to(max(n, LANE), LANE)
+    r_block = min(replica_block, _pad_to(replicas, 8))
+    r_pad = _pad_to(replicas, r_block)
+
+    phi0 = jax.random.uniform(key, (r_pad, n_pad), jnp.float32, 0.0, 2.0 * jnp.pi)
+    jp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(j_s)
+    hp = jnp.zeros((1, n_pad), jnp.float32).at[0, :n].set(h_s)
+
+    if impl == "ref":
+        phi = kref.ref_cobi_trajectory(jp, hp[0], phi0, steps=steps, dt=dt, ks_max=ks_max)
+    else:
+        interpret = _on_cpu()
+        phi = cobi_trajectory_pallas(
+            jp, hp, phi0, steps=steps, dt=dt, ks_max=ks_max,
+            replica_block=r_block, interpret=interpret,
+        )
+    spins = kref.ref_cobi_spins(phi[:replicas, :n])
+    energies = ising_energy(spins, h, j, impl=impl)
+    return spins, energies
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "replica_block"))
+def ising_energy(
+    spins: Array,
+    h: Array,
+    j: Array,
+    *,
+    impl: str = "auto",
+    replica_block: int = 512,
+) -> Array:
+    """Batched Ising energies for (R, N) spins in {-1, +1}. Returns (R,) f32."""
+    spins = jnp.asarray(spins)
+    squeeze = spins.ndim == 1
+    if squeeze:
+        spins = spins[None]
+    r, n = spins.shape
+    if impl == "ref":
+        e = kref.ref_ising_energy(spins, h, j)
+        return e[0] if squeeze else e
+    n_pad = _pad_to(max(n, LANE), LANE)
+    r_block = min(replica_block, _pad_to(r, 8))
+    r_pad = _pad_to(r, r_block)
+    sp = jnp.zeros((r_pad, n_pad), jnp.float32).at[:r, :n].set(spins.astype(jnp.float32))
+    hp = jnp.zeros((1, n_pad), jnp.float32).at[0, :n].set(jnp.asarray(h, jnp.float32))
+    jp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(jnp.asarray(j, jnp.float32))
+    e = ising_energy_pallas(sp, hp, jp, replica_block=r_block, interpret=_on_cpu())
+    e = e[:r]
+    return e[0] if squeeze else e
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, impl: str = "auto"):
+    """Blocked attention; see kernels/flash_attention.py. Defined here for API
+    uniformity -- imported lazily to keep Ising-only users light."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+
+    if impl == "ref":
+        return kref.ref_attention(q, k, v, causal=causal, window=window)
+    return _fa(q, k, v, causal=causal, window=window, interpret=_on_cpu())

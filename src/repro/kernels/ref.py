@@ -1,0 +1,108 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the numerical ground truth the kernels are tested
+against (tests/test_kernels_*.py sweep shapes and dtypes).  They are also the
+CPU fallbacks used when Pallas interpret mode is not desired.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# COBI coupled-oscillator dynamics
+# ---------------------------------------------------------------------------
+
+
+def ref_cobi_trajectory(
+    j_scaled: Array,  # (N, N) symmetric, zero diag, pre-scaled by 1/denom
+    h_scaled: Array,  # (N,)   pre-scaled by 1/denom
+    phi0: Array,  # (R, N) initial phases
+    *,
+    steps: int,
+    dt: float,
+    ks_max: float,
+) -> Array:
+    """Integrate the oscillator phase ODE; returns final phases (R, N).
+
+    dphi_i/dt = [2 * sum_j J_ij sin(phi_i - phi_j) + h_i sin(phi_i)]
+                - ks(t) * sin(2 phi_i)
+    with  sum_j J_ij sin(phi_i-phi_j) = sin(phi_i)*(J cos(phi))_i
+                                        - cos(phi_i)*(J sin(phi))_i.
+    This is gradient descent on the phase relaxation of
+    H = h.s + s^T J s  (s_i = cos phi_i), plus a ramped sub-harmonic
+    injection-locking (SHIL) term that binarizes phases to {0, pi}.
+    """
+    j_scaled = j_scaled.astype(jnp.float32)
+    h_scaled = h_scaled.astype(jnp.float32).reshape(1, -1)
+
+    def step(t, phi):
+        s = jnp.sin(phi)
+        c = jnp.cos(phi)
+        jc = c @ j_scaled  # (R, N); J symmetric
+        js = s @ j_scaled
+        grad = 2.0 * (s * jc - c * js) + h_scaled * s
+        ks = ks_max * (t.astype(jnp.float32) + 1.0) / steps
+        return phi + dt * (grad - ks * jnp.sin(2.0 * phi))
+
+    return jax.lax.fori_loop(0, steps, step, phi0.astype(jnp.float32))
+
+
+def ref_cobi_spins(phi: Array) -> Array:
+    """Read out spins s = sign(cos phi) in {-1, +1} (int8)."""
+    return jnp.where(jnp.cos(phi) >= 0.0, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Batched Ising energy
+# ---------------------------------------------------------------------------
+
+
+def ref_ising_energy(spins: Array, h: Array, j: Array) -> Array:
+    """E_r = h . s_r + s_r^T J s_r  for a batch of spin vectors (R, N)."""
+    s = spins.astype(jnp.float32)
+    return s @ h.astype(jnp.float32) + jnp.einsum(
+        "ri,ij,rj->r", s, j.astype(jnp.float32), s
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (blocked online softmax), causal or full, with optional
+# sliding window.  Reference = naive materialized attention.
+# ---------------------------------------------------------------------------
+
+
+def ref_attention(
+    q: Array,  # (B, Sq, H, D)
+    k: Array,  # (B, Skv, KH, D)
+    v: Array,  # (B, Skv, KH, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> Array:
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    assert h % kh == 0
+    rep = h // kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.astype(q.dtype)

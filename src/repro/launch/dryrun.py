@@ -1,0 +1,347 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) cell against 512 placeholder devices,
+record memory_analysis / cost_analysis / collective bytes for the roofline.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+Results are cached per-cell as JSON under experiments/dryrun/ (resumable).
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.core.hardware import TPU_V5E  # noqa: E402
+from repro.launch import steps as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str, default_trip: int) -> dict:
+    """Sum collective payload bytes from optimized HLO.
+
+    Ops inside while bodies are multiplied by the loop trip count
+    (XLA's known_trip_count when annotated, else `default_trip`, the layer-
+    scan length -- our dominant loop).  all-reduce counts 2x (reduce-scatter
+    + all-gather equivalent on a ring).
+    """
+    # Split into computations; record collective bytes per computation.
+    comp_bytes: dict[str, dict] = {}
+    comp_name = None
+    for line in hlo.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if m and "{" in line:
+            comp_name = m.group(1)
+            comp_bytes[comp_name] = {c: 0 for c in _COLLECTIVES}
+            comp_bytes[comp_name]["_whiles"] = []
+            continue
+        if comp_name is None:
+            continue
+        for c in _COLLECTIVES:
+            if re.search(rf"=\s*[\w\[\],() ]*\s*{c}\(", line) or f" {c}(" in line:
+                lhs = line.split("=", 1)[0] if "=" in line else ""
+                rhs = line.split("=", 1)[1] if "=" in line else line
+                type_part = rhs.strip().split(c + "(")[0]
+                nbytes = _shape_bytes(type_part)
+                mult = 2 if c == "all-reduce" else 1
+                comp_bytes[comp_name][c] += nbytes * mult
+                break
+        if "while(" in line:
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            tm = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', line)
+            if bm:
+                comp_bytes[comp_name]["_whiles"].append(
+                    (bm.group(1), int(tm.group(1)) if tm else default_trip)
+                )
+
+    # Entry = computation containing whiles or the one named ENTRY; resolve
+    # nested whiles recursively.
+    def total_for(comp, trip_mult, seen):
+        if comp not in comp_bytes or comp in seen:
+            return {c: 0 for c in _COLLECTIVES}
+        seen = seen | {comp}
+        tot = {c: comp_bytes[comp][c] * trip_mult for c in _COLLECTIVES}
+        for body, trips in comp_bytes[comp]["_whiles"]:
+            sub = total_for(body, trip_mult * trips, seen)
+            for c in _COLLECTIVES:
+                tot[c] += sub[c]
+        return tot
+
+    # Find entry computation: the one not referenced as a body/condition.
+    referenced = set()
+    for comp, info in comp_bytes.items():
+        for body, _ in info["_whiles"]:
+            referenced.add(body)
+    candidates = [c for c in comp_bytes if c not in referenced]
+    totals = {c: 0 for c in _COLLECTIVES}
+    entry = None
+    for cand in candidates:
+        t = total_for(cand, 1, set())
+        if sum(t.values()) >= sum(totals.values()):
+            totals, entry = t, cand
+    totals["total_bytes"] = sum(totals[c] for c in _COLLECTIVES)
+    totals["entry"] = entry or ""
+    return totals
+
+
+def build_cell(arch: str, shape_name: str, mesh=None, opt_cfg=None):
+    cfg = get_config(arch)
+    cell = next(c for c in SHAPES if c.name == shape_name)
+    opt_cfg = opt_cfg or OptConfig()
+    specs = S.input_specs(cfg, cell, opt_cfg)
+    if cell.kind == "train":
+        fn = S.make_train_step(cfg, opt_cfg, mesh=mesh)
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        donate = (0, 1)
+    elif cell.kind == "prefill":
+        fn = S.make_prefill_step(cfg, mesh=mesh)
+        args = [specs["params"], specs["tokens"], specs["cache"]]
+        if "frontend" in specs:
+            args.append(specs["frontend"])
+        args = tuple(args)
+        donate = (2,)
+    else:
+        fn = S.make_decode_step(cfg, mesh=mesh)
+        args = (specs["params"], specs["tokens"], specs["positions"], specs["cache"])
+        donate = (3,)
+    return cfg, cell, fn, args, donate
+
+
+def run_ising_fleet(multi_pod: bool, out_dir: Path, *, bf16: bool = False) -> dict:
+    """Paper-representative cell: datacenter-scale batched COBI simulation.
+
+    docs x replicas oscillator anneals, docs sharded over (pod, data),
+    replicas over model.  D=4096 docs, R=512 replicas, N=64 spins, T=1000."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tag = f"ising-fleet{'-bf16' if bf16 else ''}__solve__{'multi' if multi_pod else 'single'}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+    record = {"arch": "ising-fleet" + ("-bf16" if bf16 else ""), "shape": "solve",
+              "mesh": "2x16x16" if multi_pod else "16x16"}
+    t0 = time.time()
+    try:
+        from repro.analysis.hlo import analyze
+        from repro.launch.steps import make_ising_solve_step
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        d_docs, r, n, steps = 4096, 512, 64, 1000
+        dt = np.dtype("bfloat16") if bf16 else np.dtype("float32")
+        fn = make_ising_solve_step(steps=steps)
+        dp = ("pod", "data") if multi_pod else ("data",)
+        in_sh = (
+            NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp, None, None)),
+            NamedSharding(mesh, P(dp, "model", None)),
+        )
+        out_sh = (NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)))
+        args = (
+            jax.ShapeDtypeStruct((d_docs, n), dt),
+            jax.ShapeDtypeStruct((d_docs, n, n), dt),
+            jax.ShapeDtypeStruct((d_docs, r, n), dt),
+        )
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+            compiled = lowered.compile()
+        hl = analyze(compiled.as_text())
+        record.update(
+            status="ok", chips=int(np.prod(mesh.devices.shape)),
+            compile_s=round(time.time() - t0, 1), lower_s=0.0,
+            flops_total=float((compiled.cost_analysis() or {}).get("flops", 0)),
+            bytes_total=float((compiled.cost_analysis() or {}).get("bytes accessed", 0)),
+            hlo_flops_per_chip=hl["flops"],
+            hlo_traffic_bytes_per_chip=hl["traffic_bytes"],
+            hlo_collectives_per_chip=hl["collectives"],
+            hlo_collective_link_bytes_per_chip=hl["collective_link_bytes"],
+            workload=dict(docs=d_docs, replicas=r, spins=n, steps=steps),
+        )
+    except Exception as e:
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             *, overrides: dict | None = None, serve_params: bool = False,
+             variant: str = "", opt_cfg=None) -> dict:
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    if variant:
+        tag += f"__{variant}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    cell = next(c for c in SHAPES if c.name == shape_name)
+    ok, why = shape_applicable(cfg, cell)
+    record = {"arch": arch, "shape": shape_name, "variant": variant,
+              "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        out_path.write_text(json.dumps(record, indent=1))
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        import repro.configs.base as cb
+
+        orig_cfg = cb.REGISTRY[arch]
+        if overrides:
+            cb.REGISTRY[arch] = orig_cfg.replace(**overrides)
+        try:
+            cfg, cell, fn, args, donate = build_cell(arch, shape_name, mesh=mesh,
+                                                     opt_cfg=opt_cfg)
+        finally:
+            cb.REGISTRY[arch] = orig_cfg
+        in_sh, out_sh = S.step_shardings(cfg, cell, mesh, serve_params=serve_params,
+                                         opt_cfg=opt_cfg)
+        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
+            jitted = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        from repro.analysis.hlo import analyze
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        hl = analyze(hlo)  # exact per-chip flops/traffic/collectives
+        coll = parse_collectives(hlo, default_trip=cfg.n_groups)
+        n_chips = int(np.prod(mesh.devices.shape))
+
+        mem_stats = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            mem_stats[attr] = getattr(mem, attr, None)
+
+        record.update(
+            status="ok",
+            chips=n_chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            # raw cost_analysis (CPU backend counts loop bodies once):
+            flops_total=float(cost.get("flops", 0.0)),
+            bytes_total=float(cost.get("bytes accessed", 0.0)),
+            # trip-count-exact analyzer results (per chip):
+            hlo_flops_per_chip=hl["flops"],
+            hlo_traffic_bytes_per_chip=hl["traffic_bytes"],
+            hlo_collectives_per_chip=hl["collectives"],
+            hlo_collective_link_bytes_per_chip=hl["collective_link_bytes"],
+            collectives=coll,
+            memory=mem_stats,
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # record failures -- they are bugs to fix
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def _parse_overrides(s: str) -> dict:
+    out = {}
+    for kv in s.split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        elif v == "None":
+            out[k] = None
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--variant", default="", help="tag for optimized configs")
+    ap.add_argument("--override", default="", help="cfg overrides k=v,k=v")
+    ap.add_argument("--serve-tp-only", action="store_true",
+                    help="TP-only weights for prefill/decode (no FSDP factor)")
+    ap.add_argument("--opt-state-dtype", default="float32",
+                    help="optimizer state dtype (bfloat16 -> SR rounding)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.arch in ("ising-fleet", "ising-fleet-bf16"):
+        for multi in meshes:
+            rec = run_ising_fleet(multi, out_dir, bf16=args.arch.endswith("bf16"))
+            print(f"[{rec['mesh']}] {rec['arch']}: {rec.get('status')} "
+                  f"{rec.get('error', '')[:160]}", flush=True)
+        return
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = [c.name for c in SHAPES] if args.shape == "all" else [args.shape]
+    overrides = _parse_overrides(args.override)
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi, out_dir, overrides=overrides,
+                               serve_params=args.serve_tp_only,
+                               variant=args.variant,
+                               opt_cfg=OptConfig(state_dtype=args.opt_state_dtype))
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f"compile={rec['compile_s']}s flops={rec['flops_total']:.3g} "
+                             f"coll={rec['collectives']['total_bytes']:.3g}B")
+                elif status == "error":
+                    extra = rec.get("error", "")[:160]
+                elif status == "skipped":
+                    extra = rec.get("reason", "")
+                print(f"[{rec['mesh']}] {arch} x {shape}: {status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 100 --ckpt-dir /tmp/ckpt
+
+On a real cluster this binary runs per-host under the usual TPU runtime
+(jax.distributed.initialize picks up the pod topology); here it runs the
+same code single-host.  --resume is automatic: the loop probes the
+checkpoint dir (fault tolerance: restart-from-latest is the recovery path).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticTextTask
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step, step_shardings
+from repro.models import init_params
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized smoke variant of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    params = init_params(cfg, jax.random.key(0))
+    opt_cfg = opt.OptConfig(peak_lr=args.lr, total_steps=args.steps)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt_cfg, mesh=mesh), donate_argnums=(0, 1))
+    data = SyntheticTextTask(
+        DataConfig(batch_size=args.batch, seq_len=args.seq), cfg.vocab_size
+    )
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir)
+    train(cfg, step, params, opt_state, data, loop)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    embed_sentences,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)

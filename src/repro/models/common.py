@@ -1,0 +1,91 @@
+"""Shared neural building blocks (pure JAX, params as pytrees of arrays)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def rmsnorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron/minitron
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, D); positions: (B, S) absolute token positions."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int, dtype=jnp.float32) -> Array:
+    """Classic transformer absolute embeddings (whisper-style frontends)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
+    emb = jnp.zeros((seq, dim), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb.astype(dtype)
+
+
+def stack_layer_params(init_fn, key, n: int):
+    """Init n structurally-identical layers as one stacked pytree (leading n)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def causal_conv1d(x: Array, w: Array, state: Optional[Array] = None):
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C).  Returns (y, new_state)
+    where state carries the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(pad)
+    return y, new_state

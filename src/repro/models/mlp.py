@@ -1,0 +1,146 @@
+"""MLPs (SwiGLU / GeGLU / plain) and Mixture-of-Experts with GShard-style
+capacity dispatch (shardable one-hot einsums; see DESIGN.md sec. 5)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import activation, dense_init
+
+Array = jax.Array
+
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = cfg.dtype
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d, f), dt),
+        "w_out": dense_init(ks[1], (f, d), dt, scale=f**-0.5),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def mlp_apply(p, cfg, x: Array) -> Array:
+    act = activation(cfg.act)
+    h = constrain(x @ p["w_in"], "batch", None, "model")
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg):
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    dt = cfg.dtype
+    ks = jax.random.split(key, 6)
+    e = m.num_experts
+
+    def expert_leaf(k, shape, scale=None):
+        return jax.vmap(lambda kk: dense_init(kk, shape, dt, scale))(
+            jax.random.split(k, e)
+        )
+
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_in": expert_leaf(ks[1], (d, fe)),
+        "w_gate": expert_leaf(ks[2], (d, fe)),
+        "w_out": expert_leaf(ks[3], (fe, d), scale=fe**-0.5),
+    }
+    if m.d_ff_shared:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=m.d_ff_shared)
+        p["shared_gate"] = dense_init(ks[5], (d, 1), dt)
+    return p
+
+
+def _route(p, cfg, x):
+    """Shared router: returns (gate_vals, expert_idx, pos, keep, aux)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = int(m.capacity_factor * k * s / e) or 1
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (B,S,k,E)
+    flat = onehot.reshape(b, s * k, e)  # choices in priority order
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat  # (B, S*k, E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(b, s, k).astype(jnp.int32)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    density = jnp.mean(onehot.sum(2), axis=(0, 1))
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = m.router_aux_weight * e * jnp.sum(density / k * router_mean)
+    return gate_vals, expert_idx, pos, keep, onehot, cap, aux
+
+
+def _expert_ffn(p, cfg, xe):
+    """xe: (B, E, C, D) -> (B, E, C, D) through per-expert gated MLP."""
+    act = activation(cfg.act)
+    hidden = act(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["w_in"]
+    )
+    hidden = constrain(hidden, "batch", None, None, "model")
+    return jnp.einsum("becf,efd->becd", hidden, p["w_out"])
+
+
+def moe_apply(p, cfg, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Two dispatch implementations (cfg.moe_impl):
+      * "einsum"  -- GShard one-hot dispatch/combine matmuls.  Paper-era
+        baseline; shards cleanly but costs 2*T*E*C*D dispatch flops, which
+        DOMINATES compute at E=60 (qwen2-moe: ~100x the expert flops).
+      * "scatter" -- positions from the same cumsum routing, but tokens move
+        via scatter-add into the (B,E,C,D) buffer and gather back: zero
+        dispatch matmul flops (EXPERIMENTS.md section Perf, hillclimb B).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    gate_vals, expert_idx, pos, keep, onehot, cap, aux = _route(p, cfg, x)
+
+    impl = getattr(cfg, "moe_impl", "einsum")
+    if impl == "scatter":
+        # Each (expert, position) slot receives exactly ONE token (positions
+        # are a per-expert cumsum), so the scatter-add never accumulates and
+        # the capacity buffer can stay in the compute dtype (bf16).
+        buf = jnp.zeros((b, e, cap, d), x.dtype)
+        bi = jnp.broadcast_to(jnp.arange(b)[:, None, None], (b, s, k))
+        pos_c = jnp.minimum(pos, cap - 1)
+        contrib = (x[:, :, None, :] * keep[..., None].astype(x.dtype))  # (B,S,k,D)
+        buf = buf.at[bi, expert_idx, pos_c].add(contrib, mode="drop")
+        ye = _expert_ffn(p, cfg, buf)  # (B,E,C,D)
+        back = ye.astype(jnp.float32)[bi, expert_idx, pos_c]  # (B,S,k,D)
+        y = jnp.einsum("bskd,bsk->bsd", back, gate_vals * keep).astype(x.dtype)
+    else:
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+        dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_oh)
+        combine = jnp.einsum("bsec,bsk,bske->bsec", dispatch, gate_vals, onehot)
+        xe = jnp.einsum("bsd,bsec->becd", x.astype(jnp.float32), dispatch).astype(x.dtype)
+        xe = constrain(xe, "batch", None, None, None)
+        ye = _expert_ffn(p, cfg, xe)
+        y = jnp.einsum("becd,bsec->bsd", ye.astype(jnp.float32), combine).astype(x.dtype)
+
+    if "shared" in p:
+        sg = jax.nn.sigmoid(x @ p["shared_gate"]).astype(x.dtype)
+        y = y + sg * mlp_apply(p["shared"], cfg, x)
+    return y, aux

@@ -1,0 +1,192 @@
+"""Chunked state-space/linear-attention core (Mamba2 SSD algorithm) and the
+Mamba2 block (zamba2's backbone).
+
+The SSD recurrence  S_t = exp(a_t) S_{t-1} + k_t (x) v_t,  y_t = q_t . S_t
+is evaluated chunk-parallel: quadratic attention-like intra-chunk matmuls
+(MXU-friendly) + a lax.scan over chunk states (inter-chunk).  The same core
+drives the mLSTM (xlstm.py) -- scalar per-head decay in both cases.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import causal_conv1d, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def chunked_linear_attention(
+    q: Array,  # (B, S, H, N)
+    k: Array,  # (B, S, H, N)
+    v: Array,  # (B, S, H, P)
+    log_a: Array,  # (B, S, H) per-step log decay, <= 0
+    *,
+    chunk: int = 64,
+    state0: Optional[Array] = None,  # (B, H, N, P)
+) -> Tuple[Array, Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P)).  Exact (no approximation)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    L = min(chunk, s)
+    s_orig = s
+    if s % L:
+        # Pad with identity steps: decay=1 (log 0), k=v=0 contribute nothing.
+        pad = L - s % L
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, log_a = zf(q), zf(k), zf(v), zf(log_a)
+        s = s + pad
+    c = s // L
+
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(b, c, L, h, n)
+    kc = k.astype(f32).reshape(b, c, L, h, n)
+    vc = v.astype(f32).reshape(b, c, L, h, p)
+    ac = log_a.astype(f32).reshape(b, c, L, h)
+
+    cum = jnp.cumsum(ac, axis=2)  # inclusive within-chunk cumulative decay
+    total = cum[:, :, -1]  # (B, C, H)
+
+    # Intra-chunk: M_ij = (q_i . k_j) * exp(cum_i - cum_j) for i >= j.
+    # Mask BEFORE exp (double-where) so masked entries never produce inf,
+    # whose cotangent would be NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,C,L,L,H) i,j
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", qc, kc) * decay
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", scores, vc)
+
+    # Chunk state contributions: sum_j exp(total - cum_j) k_j (x) v_j.
+    rem = jnp.exp(total[:, :, None] - cum)  # (B,C,L,H)
+    s_chunk = jnp.einsum("bclh,bclhn,bclhp->bchnp", rem, kc, vc)
+
+    # Inter-chunk scan: S_c = exp(total_c) S_{c-1} + s_chunk_c.
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), f32)
+    else:
+        state0 = state0.astype(f32)
+
+    def step(carry, inp):
+        tot_c, sc = inp  # (B,H), (B,H,N,P)
+        prev = carry
+        new = jnp.exp(tot_c)[..., None, None] * prev + sc
+        return new, prev  # emit the state *entering* this chunk
+
+    total_t = jnp.moveaxis(total, 1, 0)  # (C, B, H)
+    s_chunk_t = jnp.moveaxis(s_chunk, 1, 0)  # (C, B, H, N, P)
+    final_state, prev_states = jax.lax.scan(step, state0, (total_t, s_chunk_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, C, H, N, P)
+
+    y_inter = jnp.einsum(
+        "bclhn,bchnp,bclh->bclhp", qc, prev_states, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(v.dtype), final_state
+
+
+def linear_attention_step(
+    q: Array,  # (B, H, N)
+    k: Array,
+    v: Array,  # (B, H, P)
+    log_a: Array,  # (B, H)
+    state: Array,  # (B, H, N, P)
+) -> Tuple[Array, Array]:
+    """One decode step of the same recurrence."""
+    f32 = jnp.float32
+    state = jnp.exp(log_a.astype(f32))[..., None, None] * state.astype(f32) + jnp.einsum(
+        "bhn,bhp->bhnp", k.astype(f32), v.astype(f32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    n = ssm.d_state
+    h = d_in // ssm.head_dim
+    conv_dim = d_in + 2 * n  # x, B, C all convolved (ngroups = 1)
+    ks = jax.random.split(key, 5)
+    dt = cfg.dtype
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * n + h), dt),
+        "conv_w": dense_init(ks[1], (ssm.d_conv, conv_dim), dt, scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dt),
+        "out_proj": dense_init(ks[2], (d_in, d), dt, scale=d_in**-0.5),
+    }
+
+
+def mamba2_apply(
+    p,
+    cfg,
+    x: Array,  # (B, S, D)
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+) -> Tuple[Array, Optional[dict]]:
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    d_in = ssm.expand * d
+    n = ssm.d_state
+    h = d_in // ssm.head_dim
+    ph = ssm.head_dim
+
+    proj = constrain(x @ p["in_proj"], "batch", None, "model")  # (B,S, 2*d_in+2n+h)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * n], axis=-1)
+
+    conv_state = cache.get("conv") if (cache is not None and mode == "decode") else None
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    dt_act = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt_act  # log decay <= 0
+
+    xh = xs.reshape(b, s, h, ph)
+    v = xh * dt_act[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, h, n))  # ngroups=1 shared
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, n))
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        y1, new_state = linear_attention_step(
+            q[:, 0], k[:, 0], v[:, 0], a[:, 0], cache["state"]
+        )
+        y = y1[:, None]
+    else:
+        y, new_state = chunked_linear_attention(q, k, v, a, chunk=ssm.chunk)
+
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv, "state": new_state}
+    return out, new_cache
+
+
+def mamba2_cache_init(cfg, batch: int, dtype) -> dict:
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    n = ssm.d_state
+    h = d_in // ssm.head_dim
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, d_in + 2 * n), dtype),
+        "state": jnp.zeros((batch, h, n, ssm.head_dim), jnp.float32),
+    }

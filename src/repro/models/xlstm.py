@@ -1,0 +1,184 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel via the SSD core) and
+sLSTM (scalar memory with hidden-to-hidden recurrence, lax.scan over time).
+
+Faithful to arXiv:2405.04517 structure; one numerical deviation recorded in
+DESIGN.md: the mLSTM input gate uses a clipped exponential and the
+denominator-normalizer is carried as an augmented value column through the
+same chunked recurrence as Mamba2 (exact, not approximated).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    causal_conv1d,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.models.ssd import chunked_linear_attention, linear_attention_step
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    d_in = 2 * d  # projection factor 2
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    dt = cfg.dtype
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dt),  # x_inner, z gate
+        "conv_w": dense_init(ks[1], (4, d_in), dt, scale=0.5),
+        "wq": dense_init(ks[2], (d_in, d_in), dt),
+        "wk": dense_init(ks[3], (d_in, d_in), dt),
+        "wv": dense_init(ks[4], (d_in, d_in), dt),
+        "w_gates": dense_init(ks[5], (d_in, 2 * nh), jnp.float32),  # i, f per head
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]
+        ),  # forget bias > 0 -> long memory at init
+        "norm": rmsnorm_init(d_in, dt),
+        "out_proj": dense_init(ks[6], (d_in, d), dt, scale=d_in**-0.5),
+    }
+
+
+def _mlstm_qkv_gates(p, cfg, x, conv_state=None):
+    b, s, d = x.shape
+    d_in = 2 * d
+    nh = cfg.n_heads
+    dh = d_in // nh
+    proj = x @ p["in_proj"]
+    x_in, z = jnp.split(proj, 2, axis=-1)
+    xc, new_conv = causal_conv1d(x_in, p["conv_w"], state=conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, s, nh, dh)
+    k = (xc @ p["wk"]).reshape(b, s, nh, dh) * (dh**-0.5)
+    v = (x_in @ p["wv"]).reshape(b, s, nh, dh)
+    gates = x_in.astype(jnp.float32) @ p["w_gates"] + p["gate_bias"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)  # (B,S,NH)
+    log_f = jax.nn.log_sigmoid(f_raw)  # <= 0, exact
+    i_gate = jnp.exp(jnp.clip(i_raw, -15.0, 5.0))  # clipped exponential gate
+    return q, k, v, z, log_f, i_gate, new_conv
+
+
+def mlstm_apply(p, cfg, x, *, mode="train", cache=None):
+    b, s, d = x.shape
+    d_in = 2 * d
+    nh = cfg.n_heads
+    dh = d_in // nh
+    conv_state = cache.get("conv") if (cache is not None and mode == "decode") else None
+    q, k, v, z, log_f, i_gate, new_conv = _mlstm_qkv_gates(p, cfg, x, conv_state)
+
+    # Fold the input gate into k; append a ones-column to v to carry the
+    # normalizer n_t through the same recurrence.
+    k = k * i_gate[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        y_aug, new_state = linear_attention_step(
+            q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0], cache["state"]
+        )
+        y_aug = y_aug[:, None]
+    else:
+        state0 = cache["state"] if (cache is not None and mode == "prefill_resume") else None
+        y_aug, new_state = chunked_linear_attention(
+            q, k, v_aug, log_f, chunk=min(2048, s), state0=state0
+        )
+
+    num, den = y_aug[..., :dh], y_aug[..., dh:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(p["norm"], y, eps=cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv, "state": new_state}
+    return out, new_cache
+
+
+def mlstm_cache_init(cfg, batch: int, dtype) -> dict:
+    d_in = 2 * cfg.d_model
+    nh = cfg.n_heads
+    dh = d_in // nh
+    return {
+        "conv": jnp.zeros((batch, 3, d_in), dtype),
+        "state": jnp.zeros((batch, nh, dh, dh + 1), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    f_ff = int(4 * d / 3 + 127) // 128 * 128  # xLSTM pf=4/3, tile-rounded
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dt),  # z, i, f, o stacked
+        "r": dense_init(ks[1], (nh, dh, 4 * dh), dt),  # block-diag recurrent
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "norm": rmsnorm_init(d, dt),
+        "ffn_in": dense_init(ks[2], (d, f_ff), dt),
+        "ffn_out": dense_init(ks[3], (f_ff, d), dt, scale=f_ff**-0.5),
+    }
+
+
+def slstm_apply(p, cfg, x, *, mode="train", cache=None):
+    """Sequential scan over time (hidden-to-hidden recurrence is inherently
+    serial -- this block is why xlstm-1.3b keeps sLSTM layers sparse)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    wx = (x @ p["w_in"]).astype(jnp.float32)  # (B,S,4D)
+
+    if cache is not None and mode == "decode":
+        st0 = cache
+    else:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        st0 = {"c": zeros, "n": zeros + 1e-6, "h": zeros, "m": zeros}
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(st, wx_t):  # wx_t: (B, 4D)
+        h_heads = st["h"].reshape(b, nh, dh)
+        rec = jnp.einsum("bhd,hde->bhe", h_heads, r).reshape(b, 4 * d)
+        pre = wx_t + rec + p["bias"]
+        z_r, i_r, f_r, o_r = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z_r)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_r) + st["m"], i_r)
+        i_g = jnp.exp(i_r - m_new)
+        f_g = jnp.exp(jax.nn.log_sigmoid(f_r) + st["m"] - m_new)
+        c = f_g * st["c"] + i_g * z
+        n = f_g * st["n"] + i_g
+        h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    st, hs = jax.lax.scan(step, st0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,D)
+    y = rmsnorm(p["norm"], y, eps=cfg.norm_eps)
+    y = y + jax.nn.gelu(y @ p["ffn_in"]) @ p["ffn_out"]
+    new_cache = st if mode in ("decode", "prefill") else None
+    return y, new_cache
+
+
+def slstm_cache_init(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros + 1e-6, "h": zeros, "m": zeros}

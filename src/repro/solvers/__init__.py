@@ -1,0 +1,2 @@
+from repro.solvers import brute, cobi, greedy, random_baseline, sa, tabu  # noqa: F401
+from repro.solvers.base import SolverResult  # noqa: F401

@@ -1,0 +1,22 @@
+"""Common solver interface: every solver consumes an IsingProblem and returns
+a batch of candidate spin configurations with their energies."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SolverResult:
+    spins: Array  # (R, N) int8 in {-1, +1}
+    energies: Array  # (R,) f32 -- energy of the instance that was solved
+
+    def best(self) -> tuple[Array, Array]:
+        import jax.numpy as jnp
+
+        i = jnp.argmin(self.energies)
+        return self.spins[i], self.energies[i]

@@ -1,0 +1,28 @@
+"""Random-selection baseline (paper Sec. IV-A): each iteration draws a random
+cardinality-M selection; the best under the FP objective is kept."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formulation import EsProblem, es_objective
+
+Array = jax.Array
+
+
+def random_selections(key: Array, n: int, m: int, iterations: int) -> Array:
+    """(iterations, n) {0,1} selections with exactly m ones each."""
+
+    def one(k):
+        perm = jax.random.permutation(k, n)
+        return (perm < m).astype(jnp.int32)  # random m-subset via permutation ranks
+
+    return jax.vmap(one)(jax.random.split(key, iterations))
+
+
+def solve(problem: EsProblem, key: Array, iterations: int) -> tuple[Array, Array]:
+    """Returns (best selection (n,), objectives per iteration (iterations,))."""
+    xs = random_selections(key, problem.n, problem.m, iterations)
+    objs = es_objective(problem, xs)
+    return xs[jnp.argmax(objs)], objs

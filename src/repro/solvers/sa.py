@@ -1,0 +1,78 @@
+"""Simulated annealing baseline (vectorized single-spin Metropolis)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formulation import IsingProblem
+from repro.solvers.base import SolverResult
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("replicas", "sweeps"))
+def _sa(h, j, key, replicas: int, sweeps: int, t_hi: float, t_lo: float):
+    n = h.shape[-1]
+    h = h.astype(jnp.float32)
+    j = j.astype(jnp.float32)
+    k_init, k_loop = jax.random.split(key)
+    s0 = jnp.where(jax.random.bernoulli(k_init, 0.5, (replicas, n)), 1.0, -1.0)
+    f0 = s0 @ j
+    e0 = s0 @ h + jnp.sum(s0 * f0, axis=-1)
+    steps = sweeps * n
+
+    def body(t, st):
+        s, f, e, best_e, best_s, key = st
+        key, k_pick, k_acc = jax.random.split(key, 3)
+        temp = t_hi * (t_lo / t_hi) ** (t / jnp.maximum(steps - 1, 1))
+        k = jax.random.randint(k_pick, (replicas,), 0, n)
+        onehot = jax.nn.one_hot(k, n, dtype=jnp.float32)
+        s_k = jnp.sum(s * onehot, axis=-1)
+        f_k = jnp.sum(f * onehot, axis=-1)
+        h_k = h[k]
+        de = -2.0 * s_k * (h_k + 2.0 * f_k)
+        # de < 0 always accepts (exp(min(-de/T, 0)) == 1 there).
+        accept = jax.random.uniform(k_acc, (replicas,)) < jnp.exp(
+            jnp.minimum(-de / jnp.maximum(temp, 1e-9), 0.0)
+        )
+        flip = jnp.where(accept, 1.0, 0.0)
+        s_new = s * (1.0 - 2.0 * onehot * flip[:, None])
+        f_new = f - 2.0 * (s_k * flip)[:, None] * j[k]
+        e_new = e + de * flip
+        better = e_new < best_e
+        return (
+            s_new,
+            f_new,
+            e_new,
+            jnp.where(better, e_new, best_e),
+            jnp.where(better[:, None], s_new, best_s),
+            key,
+        )
+
+    t_float = jnp.arange(1)  # placeholder to keep signature simple
+    del t_float
+    s, f, e, best_e, best_s, _ = jax.lax.fori_loop(
+        0, steps, lambda t, st: body(jnp.asarray(t, jnp.float32), st),
+        (s0, f0, e0, e0, s0, k_loop),
+    )
+    return best_s.astype(jnp.int8), best_e
+
+
+def solve(
+    ising: IsingProblem,
+    key: Array,
+    *,
+    replicas: int = 8,
+    sweeps: int = 60,
+    t_hi: float | None = None,
+    t_lo: float = 0.05,
+) -> SolverResult:
+    if t_hi is None:
+        import numpy as np
+
+        t_hi = float(2.0 * np.abs(np.asarray(ising.j)).sum(-1).max() + 1e-6)
+    spins, energies = _sa(ising.h, ising.j, key, replicas, sweeps, t_hi, t_lo)
+    return SolverResult(spins=spins, energies=energies)

@@ -1,0 +1,10 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets its own 512-device flag
+# in a subprocess); keep any inherited XLA_FLAGS from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+REDUCED same-family config runs forward + one train step on CPU with correct
+shapes and no NaNs, and serves prefill+decode consistently with the
+teacher-forced forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+ALL = ASSIGNED_ARCHS + ("sbert-paper",)
+
+
+def _setup(arch, batch=2, seq=32):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (batch, seq), 0, cfg.vocab_size)
+    frontend = None
+    if cfg.n_frontend_tokens:
+        frontend = jax.random.normal(
+            jax.random.key(2), (batch, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype
+        )
+    return cfg, params, tokens, frontend
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_shapes_finite(arch):
+    cfg, params, tokens, frontend = _setup(arch)
+    logits, _, aux = forward(cfg, params, tokens, mode="train", frontend=frontend)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab_size]).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_train_step_grads_finite(arch):
+    cfg, params, tokens, frontend = _setup(arch)
+    batch = {"tokens": tokens, "targets": tokens}
+    if frontend is not None:
+        batch["frontend"] = frontend
+
+    def loss_fn(p):
+        return train_loss(cfg, p, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    # Embedding must receive gradient (sanity that the graph is connected).
+    g_embed = grads["embed"]
+    assert float(jnp.abs(g_embed).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_decode_matches_teacher_forcing(arch):
+    cfg, params, tokens, frontend = _setup(arch, seq=20)
+    b, s_pre, total = 2, 16, 20
+    full_logits, _, _ = forward(cfg, params, tokens, mode="train", frontend=frontend)
+    cache = init_cache(cfg, b, max_len=total)
+    lg, cache = prefill(cfg, params, tokens[:, :s_pre], cache, frontend=frontend)
+    errs = [float(jnp.abs(lg[:, -1] - full_logits[:, s_pre - 1]).max())]
+    for t in range(s_pre, total):
+        pos = jnp.full((b, 1), t, jnp.int32)
+        step_logits, cache = decode_step(cfg, params, tokens[:, t : t + 1], pos, cache)
+        errs.append(float(jnp.abs(step_logits - full_logits[:, t]).max()))
+    # MoE capacity dropping differs between batched-train and decode paths, so
+    # MoE archs get a looser tolerance (GShard semantics; DESIGN.md).
+    tol = 0.5 if get_config(arch).moe else 1e-3
+    assert max(errs) < tol, errs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_shape_cells_defined(arch):
+    cfg = get_config(arch)
+    cells = [(c.name,) + shape_applicable(cfg, c) for c in SHAPES]
+    assert len(cells) == 4
+    if arch in ("zamba2-2.7b", "xlstm-1.3b", "mixtral-8x22b"):
+        assert all(ok for _, ok, _ in cells), cells  # sub-quadratic: all 4 run
+    else:
+        skipped = [c for c, ok, _ in cells if not ok]
+        assert skipped == ["long_500k"]
+
+
+def test_sliding_window_cache_is_bounded():
+    cfg = get_config("mixtral-8x22b").reduced()
+    cache = init_cache(cfg, batch=2, max_len=4096)
+    k = cache["layers"]["k"]
+    assert k.shape[2] == cfg.sliding_window  # ring buffer, not full seq
+
+
+def test_exact_dims_match_spec():
+    """The full configs carry the exact public dims from the assignment."""
+    spec = {
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), arch

@@ -1,0 +1,65 @@
+"""Decomposition driver (Fig. 4): cardinalities, wrap-around, convergence."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SolveConfig, solve_es
+from repro.core.decomposition import decompose_solve, window_indices
+from repro.core.pipeline import make_subsolver
+from repro.data.synthetic import synthetic_benchmark
+from repro.solvers import brute
+
+
+def exact_subsolver(sub, m, key):
+    _, x, _, _ = brute.exact_constrained_bounds(sub.with_m(m))
+    return x
+
+
+def test_window_wraparound():
+    w = window_indices(10, 8, 5)
+    assert list(w) == [8, 9, 0, 1, 2]
+
+
+@given(st.integers(0, 5), st.integers(13, 30))
+@settings(max_examples=8, deadline=None)
+def test_decomposition_final_cardinality(seed, n):
+    p = synthetic_benchmark(seed, n, 4, lam=0.5)
+    x, trace = decompose_solve(p, exact_subsolver, jax.random.key(seed), p=12, q=6)
+    assert x.sum() == p.m
+    assert x.shape == (n,)
+    # every sub-solve except the last kept exactly q sentences
+    for kept in trace.kept[:-1]:
+        assert len(kept) == 6
+    assert trace.num_solves >= 1
+
+
+def test_decomposition_shrinks_monotonically():
+    p = synthetic_benchmark(0, 40, 5, lam=0.5)
+    x, trace = decompose_solve(p, exact_subsolver, jax.random.key(0), p=12, q=6)
+    assert x.sum() == 5
+    # windows were all of size p except the final one
+    sizes = [len(w) for w in trace.windows]
+    assert all(s == 12 for s in sizes[:-1])
+    assert sizes[-1] <= 12
+
+
+def test_decomposition_rejects_bad_pq():
+    p = synthetic_benchmark(0, 20, 6, lam=0.5)
+    with pytest.raises(ValueError):
+        decompose_solve(p, exact_subsolver, jax.random.key(0), p=10, q=10)
+    with pytest.raises(ValueError):
+        decompose_solve(p, exact_subsolver, jax.random.key(0), p=10, q=4)  # q < m
+
+
+def test_pipeline_decomposed_end_to_end():
+    p = synthetic_benchmark(3, 26, 4, lam=0.5)
+    cfg = SolveConfig(
+        solver="tabu", formulation="improved", rounding="stochastic",
+        int_range=14, iterations=2, reads=4, decompose=True, p=12, q=6,
+    )
+    rep = solve_es(p, jax.random.key(0), cfg)
+    assert rep.selection.sum() == p.m
+    assert np.isfinite(rep.objective)
+    assert rep.solver_invocations >= 2

@@ -1,0 +1,136 @@
+"""Formulation layer: QUBO <-> Ising equivalence, penalty feasibility,
+improved-formulation properties (paper Sec. III)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    EsProblem,
+    es_objective,
+    gamma_auto,
+    improved_ising,
+    original_ising,
+    qubo_improved,
+    qubo_original,
+    qubo_to_ising,
+)
+from repro.core.formulation import (
+    QuboProblem,
+    ising_energy,
+    ising_offset,
+    qubo_energy,
+)
+from repro.data.synthetic import synthetic_benchmark
+from repro.solvers import brute
+
+
+def _rand_problem(seed, n=12, m=4, lam=0.5):
+    return synthetic_benchmark(seed, n, m, lam=lam)
+
+
+@given(st.integers(0, 50), st.integers(4, 16))
+def test_qubo_ising_energy_equivalence(seed, n):
+    """H_qubo(x) == H_ising(s) + offset for x = (1+s)/2, random Q."""
+    rng = np.random.default_rng(seed)
+    q_raw = rng.normal(size=(n, n)).astype(np.float32)
+    q = QuboProblem(q=jnp.asarray((q_raw + q_raw.T) / 2))
+    isg = qubo_to_ising(q)
+    off = ising_offset(q)
+    x = jnp.asarray(rng.integers(0, 2, size=(8, n)), jnp.float32)
+    s = 2 * x - 1
+    eq = qubo_energy(q.q, x)
+    ei = ising_energy(isg.h, isg.j, s) + off
+    np.testing.assert_allclose(np.asarray(eq), np.asarray(ei), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_original_qubo_min_is_constrained_optimum(seed):
+    """With gamma_auto, the unconstrained QUBO argmin is the exact
+    cardinality-M optimum of Eq. (3) -- the penalty construction is sound."""
+    p = _rand_problem(seed, n=12, m=4)
+    q = qubo_original(p)
+    x_q, _ = brute.exact_qubo_min(np.asarray(q.q))
+    _, x_best, _, _ = brute.exact_constrained_bounds(p)
+    assert np.array_equal(x_q, x_best.astype(np.int32))
+    assert x_q.sum() == p.m
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_improved_equals_original_on_feasible_set(seed):
+    """The mu_b shift is constant on |x| = M: objective differences between
+    feasible selections are identical under both QUBOs."""
+    p = _rand_problem(seed, n=10, m=3)
+    qo = qubo_original(p, gamma=2.0)
+    qi = qubo_improved(p, gamma=2.0)
+    rng = np.random.default_rng(seed)
+    xs = []
+    for _ in range(6):
+        x = np.zeros(p.n, np.float32)
+        x[rng.choice(p.n, p.m, replace=False)] = 1
+        xs.append(x)
+    xs = jnp.asarray(np.stack(xs))
+    eo = np.asarray(qubo_energy(qo.q, xs))
+    ei = np.asarray(qubo_energy(qi.q, xs))
+    np.testing.assert_allclose(eo - eo[0], ei - ei[0], rtol=1e-4, atol=1e-3)
+
+
+def test_improved_aligns_medians():
+    """Eq. (12): median(h') == median(offdiag J') after the shift."""
+    p = _rand_problem(0, n=20, m=6)
+    isg = improved_ising(p)
+    h = np.asarray(isg.h)
+    j = np.asarray(isg.j)
+    off = j[~np.eye(p.n, dtype=bool)]
+    assert abs(np.median(h) - np.median(off)) < 1e-3 * max(1.0, abs(np.median(off)))
+
+
+def test_scale_imbalance_phenomenon():
+    """Sec. III-A: original |h| >> |J|; improved brings them together."""
+    p = _rand_problem(0, n=20, m=6)
+    iso, isi = original_ising(p), improved_ising(p)
+    off = lambda j: np.abs(np.asarray(j)[~np.eye(p.n, dtype=bool)])
+    ratio_orig = np.median(np.abs(iso.h)) / np.median(off(iso.j))
+    ratio_impr = np.median(np.abs(isi.h)) / np.median(off(isi.j))
+    assert ratio_orig > 5.0
+    assert ratio_impr < 2.0
+
+
+@given(st.integers(0, 30))
+def test_es_objective_matches_manual(seed):
+    p = _rand_problem(seed % 5, n=8, m=3)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, size=8).astype(np.float64)
+    mu = np.asarray(p.mu, np.float64)
+    beta = np.asarray(p.beta, np.float64)
+    want = float(x @ mu - p.lam * x @ beta @ x)
+    got = float(es_objective(p, jnp.asarray(x)))
+    assert abs(want - got) < 1e-4
+
+
+def test_gamma_auto_positive_and_scales_with_lam():
+    p = _rand_problem(0, n=12, m=4, lam=0.5)
+    p2 = EsProblem(mu=p.mu, beta=p.beta, m=p.m, lam=2.0)
+    assert gamma_auto(p) > 0
+    assert gamma_auto(p2) > gamma_auto(p)
+
+
+def test_quantization_creates_degenerate_optima():
+    """Paper Supplementary / Sec. IV-A: quantized formulations often admit
+    multiple equivalent global optima (the motivation for iterative
+    stochastic rounding); FP instances almost never do."""
+    from benchmarks.supplementary import _count_global_optima
+    from repro.core import improved_ising, quantize_ising
+
+    degenerate_q = 0
+    for seed in range(4):
+        p = synthetic_benchmark(seed, 12, 4)
+        isg = improved_ising(p)
+        _, c_fp = _count_global_optima(isg.h, isg.j)
+        assert c_fp == 1  # continuous coefficients -> unique optimum
+        qz = quantize_ising(isg, "deterministic", int_range=14)
+        _, c_q = _count_global_optima(qz.ising.h, qz.ising.j)
+        degenerate_q += c_q > 1
+    assert degenerate_q >= 2  # a nonnegligible fraction, as the paper reports

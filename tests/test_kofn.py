@@ -1,0 +1,42 @@
+"""General k-of-n rebalancer (contribution C2 generalized)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.formulation import QuboProblem, qubo_energy, qubo_to_ising
+from repro.core.kofn import rebalance_ising, rebalance_qubo
+
+
+@given(st.integers(0, 20), st.integers(5, 14))
+def test_rebalance_aligns_medians(seed, n):
+    rng = np.random.default_rng(seed)
+    q_raw = rng.normal(size=(n, n)) * 3 + 1
+    q = QuboProblem(q=jnp.asarray((q_raw + q_raw.T) / 2, jnp.float32))
+    isg = qubo_to_ising(q)
+    isg2, c = rebalance_ising(isg)
+    off = np.asarray(isg2.j)[~np.eye(n, dtype=bool)]
+    assert abs(np.median(np.asarray(isg2.h)) - np.median(off)) < 1e-3 * max(
+        1.0, abs(np.median(off))
+    )
+
+
+@given(st.integers(0, 20))
+def test_rebalance_constant_on_fixed_cardinality(seed):
+    """Energy differences between equal-cardinality x are preserved."""
+    n, k = 10, 4
+    rng = np.random.default_rng(seed)
+    q_raw = rng.normal(size=(n, n))
+    q = QuboProblem(q=jnp.asarray((q_raw + q_raw.T) / 2, jnp.float32))
+    q2, c = rebalance_qubo(q)
+    xs = []
+    for _ in range(5):
+        x = np.zeros(n, np.float32)
+        x[rng.choice(n, k, replace=False)] = 1
+        xs.append(x)
+    xs = jnp.asarray(np.stack(xs))
+    e1 = np.asarray(qubo_energy(q.q, xs))
+    e2 = np.asarray(qubo_energy(q2.q, xs))
+    np.testing.assert_allclose(e1 - e1[0], e2 - e2[0], rtol=1e-4, atol=1e-3)
+    # And the shift equals c * k exactly.
+    np.testing.assert_allclose(e1 - e2, c * k, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,67 @@
+"""Metrics: Eq. 13 normalization, Eq. 14-15 TTS, Eq. 16 ETS."""
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import COBI, TABU_CPU, brute_hardware
+from repro.core.metrics import (
+    Bounds,
+    ets_joules,
+    first_success_iteration,
+    normalized_objective,
+    reference_bounds,
+    success_probability,
+    tts_seconds,
+)
+from repro.data.synthetic import synthetic_benchmark
+
+
+def test_normalized_objective_bounds():
+    b = Bounds(obj_max=2.0, obj_min=-2.0, exact=True)
+    assert normalized_objective(2.0, b) == pytest.approx(1.0)
+    assert normalized_objective(-2.0, b) == pytest.approx(0.0)
+    assert normalized_objective(0.0, b) == pytest.approx(0.5)
+
+
+def test_reference_bounds_exact_small():
+    p = synthetic_benchmark(0, 12, 4, lam=0.5)
+    b = reference_bounds(p)
+    assert b.exact and b.obj_max > b.obj_min
+
+
+def test_success_probability_mle():
+    # Eq. (14): p = 1 / mean(k_i)
+    assert success_probability([2, 4]) == pytest.approx(1.0 / 3.0)
+    assert success_probability([1, 1, 1]) == pytest.approx(1.0)
+    assert success_probability([np.inf, 4]) == pytest.approx(0.25)
+    assert success_probability([]) == 0.0
+
+
+def test_tts_formula():
+    # p=0.5, target 0.95 -> ln(0.05)/ln(0.5) ~ 4.32 iterations
+    t = tts_seconds(0.5, COBI)
+    per_iter = COBI.seconds_per_solve + COBI.host_eval_seconds
+    assert t == pytest.approx(4.3219 * per_iter, rel=1e-3)
+    assert tts_seconds(0.0, COBI) == np.inf
+    assert tts_seconds(1.0, COBI) == pytest.approx(per_iter)
+
+
+def test_ets_energy_ordering():
+    """The paper's headline: COBI ETS is orders of magnitude below Tabu's at
+    comparable success probability."""
+    p = 0.3
+    e_cobi = ets_joules(p, COBI)
+    e_tabu = ets_joules(p, TABU_CPU)
+    assert e_tabu / e_cobi > 100  # >= 2 orders of magnitude
+
+
+def test_brute_hardware_scales():
+    hw1 = brute_hardware(1000)
+    hw2 = brute_hardware(100000)
+    assert hw2.seconds_per_solve > hw1.seconds_per_solve
+
+
+def test_first_success_iteration():
+    curve = np.array([0.2, 0.5, 0.93, 0.95])
+    assert first_success_iteration(curve, 0.9) == 3
+    assert first_success_iteration(np.array([0.1, 0.2]), 0.9) == np.inf

@@ -1,0 +1,129 @@
+"""Performance-variant equivalence: every hillclimb knob must be a pure
+layout/schedule change -- numerics identical (or within dtype tolerance) to
+the baseline implementation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import forward, init_params
+from repro.models.ssd import chunked_linear_attention
+
+
+def _setup(arch, **over):
+    cfg = get_config(arch).reduced().replace(**over)
+    params = init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab_size)
+    return cfg, params, tokens
+
+
+def test_moe_scatter_matches_einsum():
+    cfg_e, params, tokens = _setup("qwen2-moe-a2.7b")
+    cfg_s = cfg_e.replace(moe_impl="scatter")
+    le, _, auxe = forward(cfg_e, params, tokens, mode="train")
+    ls, _, auxs = forward(cfg_s, params, tokens, mode="train")
+    np.testing.assert_allclose(np.asarray(le), np.asarray(ls), atol=2e-5)
+    assert abs(float(auxe - auxs)) < 1e-6
+
+
+def test_chunked_attention_matches_naive():
+    cfg_n, params, tokens = _setup("tinyllama-1.1b")
+    cfg_c = cfg_n.replace(attn_chunk=16)
+    ln, _, _ = forward(cfg_n, params, tokens, mode="train")
+    lc, _, _ = forward(cfg_c, params, tokens, mode="train")
+    np.testing.assert_allclose(np.asarray(ln), np.asarray(lc), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_sliding_window():
+    cfg_n, params, tokens = _setup("mixtral-8x22b")  # SWA arch
+    cfg_c = cfg_n.replace(attn_chunk=16)
+    ln, _, _ = forward(cfg_n, params, tokens, mode="train")
+    lc, _, _ = forward(cfg_c, params, tokens, mode="train")
+    np.testing.assert_allclose(np.asarray(ln), np.asarray(lc), rtol=2e-4, atol=2e-4)
+
+
+def test_attn_probs_bf16_close():
+    cfg_n, params, tokens = _setup("tinyllama-1.1b")
+    cfg_b = cfg_n.replace(attn_probs_bf16=True)
+    ln, _, _ = forward(cfg_n, params, tokens, mode="train")
+    lb, _, _ = forward(cfg_b, params, tokens, mode="train")
+    np.testing.assert_allclose(np.asarray(ln), np.asarray(lb), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("chunks", [(8, 32), (16, 64)])
+def test_ssd_chunk_size_invariance(chunks):
+    """The chunked linear-attention recurrence is exact for ANY chunk size."""
+    c1, c2 = chunks
+    key = jax.random.key(0)
+    b, s, h, n, p = 2, 64, 3, 8, 5
+    kq, kk, kv, ka = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, s, h, n))
+    k = jax.random.normal(kk, (b, s, h, n))
+    v = jax.random.normal(kv, (b, s, h, p))
+    log_a = -jax.nn.softplus(jax.random.normal(ka, (b, s, h)))
+    y1, s1 = chunked_linear_attention(q, k, v, log_a, chunk=c1)
+    y2, s2 = chunked_linear_attention(q, k, v, log_a, chunk=c2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked form == step-by-step recurrence (the decode path)."""
+    from repro.models.ssd import linear_attention_step
+
+    key = jax.random.key(1)
+    b, s, h, n, p = 1, 12, 2, 4, 3
+    kq, kk, kv, ka = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, s, h, n))
+    k = jax.random.normal(kk, (b, s, h, n))
+    v = jax.random.normal(kv, (b, s, h, p))
+    log_a = -jax.nn.softplus(jax.random.normal(ka, (b, s, h)))
+    y_chunk, s_chunk = chunked_linear_attention(q, k, v, log_a, chunk=4)
+    state = jnp.zeros((b, h, n, p))
+    ys = []
+    for t in range(s):
+        y_t, state = linear_attention_step(q[:, t], k[:, t], v[:, t], log_a[:, t], state)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(state), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_hlo_analyzer_on_known_program():
+    """The roofline's HLO walker counts a known matmul exactly."""
+    from repro.analysis.hlo import analyze
+
+    def f(a, b):
+        return a @ b
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 64), jnp.float32),
+    ).compile()
+    r = analyze(comp.as_text())
+    want = 2 * 128 * 256 * 64
+    assert r["flops"] == pytest.approx(want, rel=0.01), r["flops"]
+
+
+def test_hlo_analyzer_scan_trip_counts():
+    """A scanned matmul must count trips x body flops."""
+    from repro.analysis.hlo import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+    ).compile()
+    r = analyze(comp.as_text())
+    want = 7 * 2 * 64 * 64 * 64
+    assert r["flops"] == pytest.approx(want, rel=0.01), r["flops"]

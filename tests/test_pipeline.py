@@ -1,0 +1,86 @@
+"""End-to-end pipeline behaviour (paper Secs. IV-V, simulation-level)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SolveConfig, es_objective, solve_es
+from repro.core.metrics import normalized_objective, reference_bounds
+from repro.core.pipeline import repair_selection
+from repro.data.synthetic import synthetic_benchmark
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return synthetic_benchmark(0, 16, 5, lam=0.5)
+
+
+@pytest.fixture(scope="module")
+def bounds(problem):
+    return reference_bounds(problem)
+
+
+def test_repair_reaches_cardinality(problem):
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        x = rng.integers(0, 2, problem.n)
+        xr = repair_selection(problem, x)
+        assert xr.sum() == problem.m
+
+
+def test_repair_keeps_feasible_unchanged_structure(problem):
+    x = np.zeros(problem.n, np.int32)
+    x[: problem.m] = 1
+    xr = repair_selection(problem, x)
+    assert np.array_equal(x, xr)
+
+
+def test_curve_monotone(problem):
+    cfg = SolveConfig(solver="tabu", iterations=6, reads=4, int_range=14)
+    rep = solve_es(problem, jax.random.key(0), cfg)
+    assert np.all(np.diff(rep.curve) >= -1e-9)
+    assert rep.curve[-1] == pytest.approx(rep.objective)
+
+
+def test_cobi_pipeline_beats_random(problem, bounds):
+    cfg_c = SolveConfig(solver="cobi", iterations=6, reads=8, int_range=14, steps=300)
+    cfg_r = SolveConfig(solver="random", iterations=6)
+    obj_c, obj_r = [], []
+    for seed in range(3):
+        obj_c.append(solve_es(problem, jax.random.key(seed), cfg_c).objective)
+        obj_r.append(solve_es(problem, jax.random.key(seed), cfg_r).objective)
+    nc = normalized_objective(np.mean(obj_c), bounds)
+    nr = normalized_objective(np.mean(obj_r), bounds)
+    assert nc > nr, (nc, nr)
+    assert nc > 0.85
+
+
+def test_improved_beats_original_at_low_precision():
+    """The paper's Fig. 1 direction at 5-bit, averaged over instances."""
+    scores = {"improved": [], "original": []}
+    for form in scores:
+        for seed in range(4):
+            p = synthetic_benchmark(seed, 16, 5, lam=0.5)
+            b = reference_bounds(p)
+            cfg = SolveConfig(
+                solver="tabu", formulation=form, rounding="deterministic",
+                bits=5, int_range=None, iterations=1, reads=6,
+            )
+            rep = solve_es(p, jax.random.key(seed), cfg)
+            scores[form].append(float(normalized_objective(rep.objective, b)))
+    assert np.mean(scores["improved"]) > np.mean(scores["original"])
+
+
+def test_fp_solve_unquantized(problem, bounds):
+    cfg = SolveConfig(solver="tabu", int_range=None, bits=None, iterations=2, reads=8)
+    rep = solve_es(problem, jax.random.key(0), cfg)
+    assert normalized_objective(rep.objective, bounds) > 0.95
+
+
+def test_brute_and_exact_agree(problem):
+    r1 = solve_es(problem, jax.random.key(0), SolveConfig(solver="brute"))
+    r2 = solve_es(problem, jax.random.key(0), SolveConfig(solver="exact"))
+    assert r1.objective == pytest.approx(r2.objective, rel=1e-5)

@@ -1,0 +1,64 @@
+"""Quantization schemes (paper Sec. IV-A): ranges, symmetry, unbiasedness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import improved_ising, quantize_ising
+from repro.core.rounding import int_range_for_bits
+from repro.data.synthetic import synthetic_benchmark
+
+
+def _ising(seed=0, n=14, m=5):
+    return improved_ising(synthetic_benchmark(seed, n, m, lam=0.5))
+
+
+@given(st.sampled_from(["deterministic", "stochastic_5050", "stochastic"]),
+       st.integers(0, 10))
+def test_quantized_in_range_integer_symmetric(scheme, seed):
+    isg = _ising(seed % 3)
+    qz = quantize_ising(isg, scheme, int_range=14, key=jax.random.key(seed))
+    h = np.asarray(qz.ising.h)
+    j = np.asarray(qz.ising.j)
+    assert np.all(np.abs(h) <= 14) and np.all(np.abs(j) <= 14)
+    assert np.allclose(h, np.round(h)) and np.allclose(j, np.round(j))
+    assert np.allclose(j, j.T)
+    assert np.allclose(np.diag(j), 0)
+
+
+def test_bits_override():
+    isg = _ising()
+    for bits in (4, 5, 6, 8):
+        qz = quantize_ising(isg, "deterministic", bits=bits)
+        r = int_range_for_bits(bits)
+        assert np.max(np.abs(np.asarray(qz.ising.h))) <= r
+        assert np.max(np.abs(np.asarray(qz.ising.j))) <= r
+
+
+def test_stochastic_rounding_unbiased():
+    """E[SR(v)] == v: average many stochastic roundings of the scaled h."""
+    isg = _ising()
+    keys = jax.random.split(jax.random.key(0), 400)
+    qzs = [quantize_ising(isg, "stochastic", int_range=14, key=k) for k in keys[:200]]
+    scale = qzs[0].scale
+    target = np.asarray(isg.h) * scale
+    mean_h = np.mean([np.asarray(q.ising.h) for q in qzs], axis=0)
+    # Clipping can bias entries at the range boundary; test interior ones.
+    interior = np.abs(target) < 13.5
+    err = np.abs(mean_h - target)[interior]
+    assert err.max() < 0.12, err.max()
+
+
+def test_deterministic_is_nearest():
+    isg = _ising()
+    qz = quantize_ising(isg, "deterministic", int_range=14)
+    target = np.asarray(isg.h) * qz.scale
+    assert np.all(np.abs(np.asarray(qz.ising.h) - target) <= 0.5 + 1e-5)
+
+
+def test_scale_maps_max_to_range():
+    isg = _ising()
+    qz = quantize_ising(isg, "deterministic", int_range=14)
+    m = max(np.abs(np.asarray(isg.h)).max(), np.abs(np.asarray(isg.j)).max())
+    assert abs(qz.scale - 14.0 / m) < 1e-6

@@ -1,0 +1,104 @@
+"""Solver correctness: all solvers approach the exact minimum on small
+instances; COBI enforces chip constraints."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import improved_ising, quantize_ising
+from repro.core.formulation import IsingProblem, ising_offset, qubo_improved
+from repro.data.synthetic import synthetic_benchmark
+from repro.kernels import ops
+from repro.solvers import brute, cobi, greedy, random_baseline, sa, tabu
+
+
+def _exact_ising_min(h, j):
+    n = len(h)
+    best = np.inf
+    for m in range(2**n):
+        s = np.where((m >> np.arange(n)) & 1, 1.0, -1.0)
+        best = min(best, float(s @ h + s @ j @ s))
+    return best
+
+
+@pytest.fixture(scope="module")
+def small_instance():
+    p = synthetic_benchmark(0, 12, 4, lam=0.5)
+    isg = improved_ising(p)
+    exact = _exact_ising_min(np.asarray(isg.h, np.float64), np.asarray(isg.j, np.float64))
+    return p, isg, exact
+
+
+def test_tabu_reaches_exact(small_instance):
+    _, isg, exact = small_instance
+    res = tabu.solve(isg, jax.random.key(0), replicas=8)
+    assert float(res.energies.min()) <= exact + 1e-3
+    # energies reported match recomputation
+    e = ops.ising_energy(res.spins, isg.h, isg.j, impl="ref")
+    np.testing.assert_allclose(np.asarray(e), np.asarray(res.energies), rtol=1e-4, atol=1e-2)
+
+
+def test_sa_close_to_exact(small_instance):
+    _, isg, exact = small_instance
+    res = sa.solve(isg, jax.random.key(1), replicas=8)
+    span = abs(exact) + 1.0
+    assert float(res.energies.min()) <= exact + 0.05 * span
+
+
+def test_cobi_solves_integer_instance(small_instance):
+    _, isg, _ = small_instance
+    qz = quantize_ising(isg, "stochastic", key=jax.random.key(2))
+    exact = _exact_ising_min(
+        np.asarray(qz.ising.h, np.float64), np.asarray(qz.ising.j, np.float64)
+    )
+    res = cobi.solve(qz.ising, jax.random.key(3), reads=16, steps=300)
+    best = float(res.energies.min())
+    span = abs(exact) + 1.0
+    assert best <= exact + 0.05 * span, (best, exact)
+
+
+def test_cobi_rejects_fp_instance(small_instance):
+    _, isg, _ = small_instance
+    with pytest.raises(ValueError, match="integer"):
+        cobi.solve(isg, jax.random.key(0))
+
+
+def test_cobi_rejects_oversized():
+    n = 80
+    h = jnp.zeros(n)
+    j = jnp.zeros((n, n))
+    with pytest.raises(ValueError, match="spins"):
+        cobi.solve(IsingProblem(h=h, j=j), jax.random.key(0))
+
+
+def test_cobi_deterministic_given_key(small_instance):
+    _, isg, _ = small_instance
+    qz = quantize_ising(isg, "deterministic")
+    r1 = cobi.solve(qz.ising, jax.random.key(7), reads=4, steps=100)
+    r2 = cobi.solve(qz.ising, jax.random.key(7), reads=4, steps=100)
+    assert np.array_equal(np.asarray(r1.spins), np.asarray(r2.spins))
+
+
+def test_brute_constrained_bounds_order(small_instance):
+    p, _, _ = small_instance
+    hi, x_hi, lo, x_lo = brute.exact_constrained_bounds(p)
+    assert hi >= lo
+    assert x_hi.sum() == p.m and x_lo.sum() == p.m
+
+
+def test_greedy_feasible_and_reasonable(small_instance):
+    p, _, _ = small_instance
+    x = greedy.greedy_select(p)
+    assert x.sum() == p.m
+    from repro.core import es_objective
+
+    hi, _, lo, _ = brute.exact_constrained_bounds(p)
+    obj = float(es_objective(p, jnp.asarray(x)))
+    assert obj >= lo + 0.5 * (hi - lo)  # greedy is decent
+
+
+def test_random_baseline_cardinality():
+    p = synthetic_benchmark(1, 15, 6, lam=0.5)
+    xs = random_baseline.random_selections(jax.random.key(0), p.n, p.m, 32)
+    assert np.all(np.asarray(xs).sum(-1) == p.m)
