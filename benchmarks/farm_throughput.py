@@ -1,0 +1,63 @@
+"""Farm throughput: sequential per-request loop vs packed chip-farm serving.
+
+Serves the same 16-request mixed-size batch (a) through the legacy
+one-solve-per-kernel-launch path (engine with the farm disabled) and (b)
+through the CobiFarm at 1 / 4 / 16 simulated chips, where every round's jobs
+across all requests are packed block-diagonally and annealed by one batched
+Pallas launch.  Emits requests/sec, projected solver-seconds-per-request
+(the paper's hardware model), and the packed-vs-loop speedup.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+
+SIZES = [10, 14, 18, 22, 26, 30, 34, 38, 12, 16, 20, 24, 28, 32, 36, 40]
+
+
+def _engine(cfg, n_chips):
+    from repro.serving import SummarizationEngine
+
+    return SummarizationEngine(cfg, n_chips=n_chips)
+
+
+def _serve(engine, docs, seed=0):
+    reqs = [engine.submit(doc, m=5) for doc in docs]
+    return engine.run_batch(reqs, seed=seed)
+
+
+def run() -> None:
+    from repro.core import SolveConfig
+    from repro.data.synthetic import synthetic_document
+
+    # Serving defaults: engine ships iterations=6; steps=400 is the COBI
+    # solver default anneal length.
+    cfg = SolveConfig(solver="cobi", iterations=6, reads=8, int_range=14, steps=400)
+    docs = [
+        " ".join(synthetic_document(100 + i, n)) for i, n in enumerate(SIZES)
+    ]
+
+    results = {}
+    for label, chips in (("loop", 0), ("farm1", 1), ("farm4", 4), ("farm16", 16)):
+        engine = _engine(cfg, chips)
+        _serve(engine, docs, seed=1)  # warmup: jit compiles
+        t0 = time.perf_counter()
+        responses = _serve(engine, docs, seed=0)
+        dt = time.perf_counter() - t0
+        rps = len(docs) / dt
+        solver_s = sum(r.projected_solver_seconds for r in responses) / len(responses)
+        results[label] = rps
+        derived = f"rps={rps:.2f};solver_s_per_req={solver_s:.6f}"
+        if chips and "loop" in results:
+            derived += f";speedup_vs_loop={rps / results['loop']:.2f}x"
+        if chips:
+            stats = engine.farm.stats()
+            derived += f";occupancy={stats.mean_occupancy:.2f}"
+        emit(f"farm_throughput_{label}_16req", dt / len(docs) * 1e6, derived)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

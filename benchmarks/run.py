@@ -12,6 +12,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        farm_throughput,
         fig1_formulation,
         fig23_iterations,
         fig5_decomposition,
@@ -31,6 +32,7 @@ def main() -> None:
         "supplementary": supplementary.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
+        "farm": farm_throughput.run,
     }
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

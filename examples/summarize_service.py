@@ -18,12 +18,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--solver", default="cobi", choices=["cobi", "tabu", "sa"])
+    ap.add_argument("--chips", type=int, default=4,
+                    help="simulated COBI chips in the farm (0 = legacy loop)")
     args = ap.parse_args()
 
     engine = SummarizationEngine(
         SolveConfig(solver=args.solver, iterations=4, reads=8, int_range=14,
                     steps=300, p=20, q=10),
         score_against_exact=True,
+        n_chips=args.chips,
     )
 
     # Mixed-size request batch: some need decomposition (>59 spins).
@@ -48,6 +51,13 @@ def main():
         total_e += resp.projected_energy_joules
     print(f"\nBatch projected solver energy: {total_e * 1e3:.3f} mJ "
           f"(paper: ~3 orders below CPU Tabu search)")
+    if engine.farm is not None:
+        s = engine.farm.stats()
+        print(
+            f"Farm: {s.jobs_completed} jobs packed into {s.super_instances} "
+            f"super-instances on {len(s.chips)} chips | mean lane occupancy "
+            f"{s.mean_occupancy:.0%} | simulated makespan {s.sim_seconds * 1e3:.2f} ms"
+        )
     print("First summary:")
     for s in responses[0].summary:
         print(f"  - {s}")

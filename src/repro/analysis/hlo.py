@@ -128,7 +128,11 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
 
 
 def _dot_flops(instr: Instr, comp: Computation) -> float:
-    m = re.search(r"dot\(\s*%?([\w\.\-]+)", instr.line)
+    # Operands may print bare (`dot(%p0, ...`) or with inline types
+    # (`dot(f32[128,256]{1,0} %p0, ...`); grab the first %name either way.
+    m = re.search(r"dot\([^%)]*%([\w\.\-]+)", instr.line)
+    if not m:
+        m = re.search(r"dot\(\s*([\w\.\-]+)", instr.line)
     if not m:
         return 0.0
     lhs = comp.symbols.get(m.group(1))
@@ -152,7 +156,9 @@ def _dot_flops(instr: Instr, comp: Computation) -> float:
 
 def _conv_flops(instr: Instr, comp: Computation) -> float:
     # rare in this codebase (causal convs are expressed as muls); rough count
-    m = re.search(r"convolution\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)", instr.line)
+    m = re.search(
+        r"convolution\([^%)]*%([\w\.\-]+)[^%)]*%([\w\.\-]+)", instr.line
+    ) or re.search(r"convolution\(\s*([\w\.\-]+)\s*,\s*([\w\.\-]+)", instr.line)
     if not m:
         return 0.0
     rhs = comp.symbols.get(m.group(2))

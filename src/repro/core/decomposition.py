@@ -38,15 +38,22 @@ def window_indices(length: int, start: int, p: int) -> np.ndarray:
     return (start + np.arange(p)) % length
 
 
-def decompose_solve(
+def decompose_steps(
     problem: EsProblem,
-    solve: SubSolver,
     key: jax.Array,
     *,
     p: int = 20,
     q: int = 10,
-) -> tuple[np.ndarray, DecompositionTrace]:
-    """Returns (selection x over the ORIGINAL N sentences, trace)."""
+):
+    """Generator form of the decomposition loop (Fig. 4).
+
+    Yields ``(subproblem, m, key)`` for each sub-solve and expects the
+    selection ``x`` over the subproblem back via ``send``; returns
+    ``(selection, trace)`` on exhaustion.  This inversion of control lets the
+    chip-farm scheduler interleave sub-solves from MANY requests into packed
+    batches; :func:`decompose_solve` keeps the plain-callback interface on
+    top of it.
+    """
     if q >= p:
         raise ValueError(f"need q < p, got p={p} q={q}")
     if q < problem.m:
@@ -62,7 +69,7 @@ def decompose_solve(
         pos = window_indices(alive.size, cursor, p)
         window = alive[np.sort(pos)]  # window in document order
         subproblem = problem.subproblem(window)
-        x = np.asarray(solve(subproblem, q, sub))
+        x = np.asarray((yield subproblem, q, sub))
         keep_local = np.nonzero(x)[0]
         trace.windows.append(window)
         trace.kept.append(window[keep_local])
@@ -77,7 +84,7 @@ def decompose_solve(
 
     key, sub = jax.random.split(key)
     subproblem = problem.subproblem(alive)
-    x = np.asarray(solve(subproblem, problem.m, sub))
+    x = np.asarray((yield subproblem, problem.m, sub))
     trace.windows.append(alive)
     trace.kept.append(alive[np.nonzero(x)[0]])
     trace.num_solves += 1
@@ -85,3 +92,21 @@ def decompose_solve(
     selection = np.zeros(problem.n, np.int32)
     selection[trace.kept[-1]] = 1
     return selection, trace
+
+
+def decompose_solve(
+    problem: EsProblem,
+    solve: SubSolver,
+    key: jax.Array,
+    *,
+    p: int = 20,
+    q: int = 10,
+) -> tuple[np.ndarray, DecompositionTrace]:
+    """Returns (selection x over the ORIGINAL N sentences, trace)."""
+    gen = decompose_steps(problem, key, p=p, q=q)
+    item = next(gen)
+    while True:
+        try:
+            item = gen.send(np.asarray(solve(*item)))
+        except StopIteration as done:
+            return done.value

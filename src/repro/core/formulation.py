@@ -24,6 +24,7 @@ Conventions (used consistently across the whole package):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -189,22 +190,39 @@ def qubo_improved(
     """
     if gamma is None:
         gamma = gamma_auto(problem)
-    mu = jnp.asarray(problem.mu, jnp.float32)
-    beta = jnp.asarray(problem.beta, jnp.float32)
-    n = problem.n
-    if mu_b is None:
-        h, j = _ising_coeffs(mu, beta, problem.m, problem.lam, gamma, 0.0)
-        mu_b = float(2.0 * (jnp.median(h) - jnp.median(_offdiag_values(j))))
-    lin = -(mu + mu_b) - 2.0 * gamma * problem.m + gamma
-    quad = problem.lam * beta + gamma
-    q = quad * (1.0 - jnp.eye(n, dtype=jnp.float32)) + jnp.diag(lin)
+    q = _qubo_improved_q(
+        jnp.asarray(problem.mu, jnp.float32),
+        jnp.asarray(problem.beta, jnp.float32),
+        jnp.float32(problem.lam),
+        jnp.float32(gamma),
+        jnp.float32(0.0 if mu_b is None else mu_b),
+        m=problem.m,
+        use_eq12=mu_b is None,
+    )
     return QuboProblem(q=q)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "use_eq12"))
+def _qubo_improved_q(mu, beta, lam, gamma, mu_b, *, m: int, use_eq12: bool) -> Array:
+    """Fused Eq. (10)/(12) build -- one launch per problem size.  Serving
+    builds a QUBO per request, so the eager per-op dispatch added up."""
+    n = mu.shape[-1]
+    if use_eq12:
+        h, j = _ising_coeffs(mu, beta, m, lam, gamma, 0.0)
+        mu_b = 2.0 * (jnp.median(h) - jnp.median(_offdiag_values(j)))
+    lin = -(mu + mu_b) - 2.0 * gamma * m + gamma
+    quad = lam * beta + gamma
+    return quad * (1.0 - jnp.eye(n, dtype=jnp.float32)) + jnp.diag(lin)
+
+
 def _offdiag_values(j: Array) -> Array:
+    # Shape-static strict-off-diagonal extraction (jit-safe): dropping the
+    # last element of the flattened (n, n) matrix and reshaping to
+    # (n-1, n+1) aligns every diagonal entry into column 0.
     n = j.shape[-1]
-    mask = ~np.eye(n, dtype=bool)
-    return j[jnp.asarray(mask)]
+    if n < 2:
+        return jnp.zeros((0,), j.dtype)
+    return jnp.reshape(jnp.ravel(j)[:-1], (n - 1, n + 1))[:, 1:].ravel()
 
 
 # ---------------------------------------------------------------------------
@@ -225,13 +243,18 @@ def qubo_to_ising(qubo: QuboProblem) -> IsingProblem:
     constant, which the tests verify; the improved-formulation phenomenon is
     unchanged.)
     """
-    q = jnp.asarray(qubo.q, jnp.float32)
-    n = qubo.n
+    h, j = _qubo_to_ising_arrays(jnp.asarray(qubo.q, jnp.float32))
+    return IsingProblem(h=h, j=j)
+
+
+@jax.jit
+def _qubo_to_ising_arrays(q: Array):
+    n = q.shape[-1]
     eye = jnp.eye(n, dtype=jnp.float32)
     off = q * (1.0 - eye)
     h = jnp.diag(q) / 2.0 + off.sum(axis=-1) / 2.0
     j = off / 4.0
-    return IsingProblem(h=h, j=j)
+    return h, j
 
 
 def ising_offset(qubo: QuboProblem) -> float:

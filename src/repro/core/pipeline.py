@@ -19,9 +19,8 @@ from repro.core.formulation import (
     es_objective,
     improved_ising,
     original_ising,
-    spins_to_selection,
 )
-from repro.core.rounding import COBI_RANGE, quantize_ising
+from repro.core.rounding import COBI_RANGE, quantize_ising, quantize_ising_many
 from repro.solvers import cobi as cobi_solver
 from repro.solvers import sa as sa_solver
 from repro.solvers import tabu as tabu_solver
@@ -56,6 +55,11 @@ class SolveReport:
     objective: float  # FP Eq. (3) objective of `selection`
     curve: np.ndarray  # best-so-far FP objective after each iteration
     solver_invocations: int
+    # Farm-scheduled solves carry simulated-hardware accounting from their
+    # job receipts; the legacy paths leave these at 0 and callers fall back
+    # to the per-invocation hardware model.
+    chip_seconds: float = 0.0
+    chip_energy_joules: float = 0.0
 
 
 def repair_selection(problem: EsProblem, x: np.ndarray) -> np.ndarray:
@@ -101,10 +105,60 @@ def _invoke(ising: IsingProblem, cfg: SolveConfig, key: Array):
     raise ValueError(f"unknown Ising solver {cfg.solver!r}")
 
 
+def _objective_np(problem: EsProblem, x: np.ndarray) -> float:
+    """Eq. (3) in host float32: the per-iteration reduce runs once per read
+    batch per request, and eager-jnp dispatch dominated at farm throughput."""
+    mu = np.asarray(problem.mu, np.float32)
+    beta = np.asarray(problem.beta, np.float32)
+    xf = x.astype(np.float32)
+    return float(xf @ mu - np.float32(problem.lam) * (xf @ (beta @ xf)))
+
+
+def _best_selection(result) -> np.ndarray:
+    """argmin-energy read -> {0,1} selection, in host numpy."""
+    energies = np.asarray(result.energies)
+    spins = np.asarray(result.spins)[int(np.argmin(energies))]
+    return ((spins.astype(np.int32) + 1) // 2).astype(np.int32)
+
+
+def _iteration_keys(key: Array, iterations: int):
+    """Per-iteration (k_quant, k_solve) pairs, split exactly as the
+    sequential loop does so farm and legacy paths stay key-compatible."""
+    out = []
+    for _ in range(iterations):
+        key, k_quant, k_solve = jax.random.split(key, 3)
+        out.append((k_quant, k_solve))
+    return out
+
+
+def _quantized_instance(ising_fp: IsingProblem, cfg: SolveConfig, k_quant: Array):
+    if cfg.int_range is None and cfg.bits is None:
+        return ising_fp
+    return quantize_ising(
+        ising_fp, cfg.rounding, int_range=cfg.int_range or COBI_RANGE,
+        bits=cfg.bits, key=k_quant,
+    ).ising
+
+
 def solve_es(
-    problem: EsProblem, key: Array, cfg: SolveConfig = SolveConfig()
+    problem: EsProblem,
+    key: Array,
+    cfg: SolveConfig = SolveConfig(),
+    *,
+    farm=None,
+    priority: int = 0,
 ) -> SolveReport:
-    """Solve one ES instance per the paper's iterative workflow (Sec. IV-A)."""
+    """Solve one ES instance per the paper's iterative workflow (Sec. IV-A).
+
+    With ``farm`` (a :class:`repro.farm.CobiFarm`) and ``solver='cobi'``, all
+    of the instance's stochastic-rounding iterations (and, when decomposing,
+    each window's iterations) go through the farm as one packed submission
+    per round instead of one kernel launch per iteration.
+    """
+    if farm is not None and cfg.solver == "cobi":
+        return drive_with_farm(
+            iter_solve_es(problem, key, cfg, farm=farm, priority=priority), farm
+        )
     if cfg.decompose:
         return _solve_decomposed(problem, key, cfg)
     if cfg.solver == "brute":
@@ -122,21 +176,13 @@ def solve_es(
 
     ising_fp = _build_ising(problem, cfg)
     best_x, best_obj, curve = None, -np.inf, []
-    for it in range(cfg.iterations):
-        key, k_quant, k_solve = jax.random.split(key, 3)
-        if cfg.int_range is None and cfg.bits is None:
-            inst = ising_fp
-        else:
-            inst = quantize_ising(
-                ising_fp, cfg.rounding, int_range=cfg.int_range or COBI_RANGE,
-                bits=cfg.bits, key=k_quant,
-            ).ising
+    for k_quant, k_solve in _iteration_keys(key, cfg.iterations):
+        inst = _quantized_instance(ising_fp, cfg, k_quant)
         result = _invoke(inst, cfg, k_solve)
-        spins, _ = result.best()
-        x = np.asarray(spins_to_selection(spins))
+        x = _best_selection(result)
         if cfg.repair:
             x = repair_selection(problem, x)
-        obj = float(es_objective(problem, jnp.asarray(x)))
+        obj = _objective_np(problem, x)
         if obj > best_obj:
             best_obj, best_x = obj, x
         curve.append(best_obj)
@@ -165,3 +211,115 @@ def _solve_decomposed(problem: EsProblem, key: Array, cfg: SolveConfig) -> Solve
     return SolveReport(
         selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations
     )
+
+
+# ---------------------------------------------------------------------------
+# Farm-scheduled solving: generators that submit whole rounds of jobs to a
+# CobiFarm, yield so a driver can pack jobs ACROSS requests, then consume the
+# futures.  Protocol: each `yield` marks "submissions for this round done";
+# the driver calls farm.drain() (once, for all concurrently active
+# generators) and resumes.
+# ---------------------------------------------------------------------------
+
+
+def _iter_cobi_iterations(
+    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int
+):
+    """Submit the instance's cfg.iterations anneal jobs, yield, reduce."""
+    ising_fp = _build_ising(problem, cfg)
+    check = cfg.int_range is not None or cfg.bits is not None
+    keypairs = _iteration_keys(key, cfg.iterations)
+    if check:
+        # Same per-iteration keys as the sequential path, one fused launch.
+        quantized = quantize_ising_many(
+            ising_fp, jnp.stack([kq for kq, _ in keypairs]), cfg.rounding,
+            int_range=cfg.int_range or COBI_RANGE, bits=cfg.bits,
+        )
+        instances = [q.ising for q in quantized]
+    else:
+        instances = [ising_fp] * cfg.iterations
+    futures = [
+        farm.submit(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
+                    priority=priority, check=check)
+        for inst, (_, k_solve) in zip(instances, keypairs)
+    ]
+    yield futures
+    best_x, best_obj, curve = None, -np.inf, []
+    chip_seconds = energy = 0.0
+    for fut in futures:
+        result = fut.result()
+        receipt = fut.receipt()
+        chip_seconds += receipt.chip_seconds
+        energy += receipt.energy_joules
+        x = _best_selection(result)
+        if cfg.repair:
+            x = repair_selection(problem, x)
+        obj = _objective_np(problem, x)
+        if obj > best_obj:
+            best_obj, best_x = obj, x
+        curve.append(best_obj)
+    return best_x, best_obj, curve, chip_seconds, energy
+
+
+def iter_solve_es(
+    problem: EsProblem,
+    key: Array,
+    cfg: SolveConfig = SolveConfig(),
+    *,
+    farm,
+    priority: int = 0,
+):
+    """Generator form of :func:`solve_es` over a chip farm (cobi only).
+
+    Yields once per submission round (one round for a direct solve, one per
+    window for a decomposed solve); returns a :class:`SolveReport` whose
+    chip_seconds / chip_energy_joules come from the farm's job receipts.
+    """
+    if cfg.solver != "cobi":
+        raise ValueError(f"farm scheduling requires solver='cobi', got {cfg.solver!r}")
+    if cfg.decompose:
+        k_dec, _ = jax.random.split(key)
+        sub_cfg = dataclasses.replace(cfg, decompose=False)
+        steps = decomp.decompose_steps(problem, k_dec, p=cfg.p, q=cfg.q)
+        chip_seconds = energy = 0.0
+        item = next(steps)
+        while True:
+            sub, m, k_sub = item
+            sel, _, _, cs, en = yield from _iter_cobi_iterations(
+                sub.with_m(m), k_sub, sub_cfg, farm, priority
+            )
+            chip_seconds += cs
+            energy += en
+            try:
+                item = steps.send(sel)
+            except StopIteration as done:
+                selection, trace = done.value
+                break
+        if cfg.repair:
+            selection = repair_selection(problem, selection)
+        obj = float(es_objective(problem, jnp.asarray(selection)))
+        return SolveReport(
+            selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations,
+            chip_seconds, energy,
+        )
+    best_x, best_obj, curve, chip_seconds, energy = yield from _iter_cobi_iterations(
+        problem, key, cfg, farm, priority
+    )
+    return SolveReport(
+        best_x, best_obj, np.asarray(curve), cfg.iterations, chip_seconds, energy
+    )
+
+
+def drive_with_farm(gen, farm) -> SolveReport:
+    """Run one farm generator to completion, draining between rounds.
+
+    For cross-request packing, drive many generators in lockstep instead and
+    drain once per round (see serving.engine.SummarizationEngine.run_batch).
+    """
+    try:
+        next(gen)
+        while True:
+            farm.drain()
+            gen.send(None)
+    except StopIteration as done:
+        return done.value

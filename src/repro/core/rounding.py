@@ -18,10 +18,12 @@ the chip (one physical coupler per spin pair).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.formulation import IsingProblem
 
@@ -87,22 +89,73 @@ def quantize_ising(
     """
     if bits is not None:
         int_range = int_range_for_bits(bits)
-    scale = joint_scale(ising, int_range)
-    n = ising.n
-    h = jnp.asarray(ising.h, jnp.float32) * scale
-    j = jnp.asarray(ising.j, jnp.float32) * scale
-
     if key is None and scheme != "deterministic":
         raise ValueError(f"scheme {scheme!r} needs a PRNG key")
-    kh = kj = None
-    if key is not None:
-        kh, kj = jax.random.split(key)
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown rounding scheme {scheme!r}; want one of {SCHEMES}")
+    if key is None:
+        key = jax.random.key(0)  # unused by the deterministic branch
+    h_q, j_q, scale = _quantize_arrays(
+        jnp.asarray(ising.h, jnp.float32), jnp.asarray(ising.j, jnp.float32), key,
+        scheme=scheme, int_range=int_range,
+    )
+    return QuantizedIsing(ising=IsingProblem(h=h_q, j=j_q), scale=float(scale))
 
-    h_q = jnp.clip(_round(h, scheme, kh), -int_range, int_range)
+
+def quantize_ising_many(
+    ising: IsingProblem,
+    keys: Array,
+    scheme: str = "stochastic",
+    *,
+    int_range: int = COBI_RANGE,
+    bits: Optional[int] = None,
+) -> list[QuantizedIsing]:
+    """Draw K independent roundings of ONE instance in a single launch.
+
+    The serving pipeline quantizes the same FP Ising once per
+    stochastic-rounding iteration; vmapping over the iteration keys replaces
+    K dispatches with one.  Bit-identical to ``[quantize_ising(ising,
+    scheme, key=k) for k in keys]`` (counter-based PRNG: each row draws its
+    own key's stream); coefficients come back as host numpy arrays.
+    """
+    if bits is not None:
+        int_range = int_range_for_bits(bits)
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown rounding scheme {scheme!r}; want one of {SCHEMES}")
+    h_q, j_q, scale = _quantize_arrays_many(
+        jnp.asarray(ising.h, jnp.float32), jnp.asarray(ising.j, jnp.float32), keys,
+        scheme=scheme, int_range=int_range,
+    )
+    h_q, j_q = np.asarray(h_q), np.asarray(j_q)
+    s = float(np.asarray(scale)[0])
+    return [
+        QuantizedIsing(ising=IsingProblem(h=h_q[k], j=j_q[k]), scale=s)
+        for k in range(len(h_q))
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "int_range"))
+def _quantize_arrays_many(h: Array, j: Array, keys: Array, *, scheme, int_range):
+    quant = functools.partial(_quantize_arrays, scheme=scheme, int_range=int_range)
+    return jax.vmap(quant, in_axes=(None, None, 0))(h, j, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "int_range"))
+def _quantize_arrays(h: Array, j: Array, key: Array, *, scheme: str, int_range: int):
+    """One fused launch per (shape, scheme, range): scale + round + mirror.
+    Serving quantizes every stochastic-rounding iteration of every request,
+    so this is a hot path."""
+    n = h.shape[-1]
+    m = jnp.maximum(jnp.max(jnp.abs(h)), jnp.max(jnp.abs(j)))
+    scale = int_range / jnp.maximum(m, 1e-12)  # == joint_scale(ising, int_range)
+    kh, kj = jax.random.split(key)
+    if scheme == "deterministic":
+        kh = kj = None
+    h_q = jnp.clip(_round(h * scale, scheme, kh), -int_range, int_range)
     # Round the strict upper triangle once, mirror for symmetry.
     upper = jnp.triu(jnp.ones((n, n), bool), k=1)
-    j_up = _round(j, scheme, kj)
+    j_up = _round(j * scale, scheme, kj)
     j_q = jnp.where(upper, j_up, 0.0)
     j_q = j_q + j_q.T
     j_q = jnp.clip(j_q, -int_range, int_range)
-    return QuantizedIsing(ising=IsingProblem(h=h_q, j=j_q), scale=scale)
+    return h_q, j_q, scale

@@ -28,12 +28,19 @@ class HashedBowEncoder:
     def __init__(self, dim: int = 256, seed: int = 0):
         self.dim = dim
         self.seed = seed
+        self._word_cache: dict[str, np.ndarray] = {}
 
     def _word_vec(self, word: str) -> np.ndarray:
-        h = hashlib.blake2b(f"{self.seed}:{word}".encode(), digest_size=8).digest()
-        rng = np.random.default_rng(int.from_bytes(h, "little"))
-        v = rng.standard_normal(self.dim)
-        return v / np.linalg.norm(v)
+        # Word vectors are pure functions of (seed, word); under serving load
+        # the vocabulary repeats across requests, so memoize per encoder.
+        v = self._word_cache.get(word)
+        if v is None:
+            h = hashlib.blake2b(f"{self.seed}:{word}".encode(), digest_size=8).digest()
+            rng = np.random.default_rng(int.from_bytes(h, "little"))
+            v = rng.standard_normal(self.dim)
+            v /= np.linalg.norm(v)
+            self._word_cache[word] = v
+        return v
 
     def encode(self, sentences: Sequence[str]) -> jnp.ndarray:
         out = np.zeros((len(sentences), self.dim), np.float32)

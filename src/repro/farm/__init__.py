@@ -1,0 +1,45 @@
+"""Virtual COBI chip farm: packed multi-instance annealing at fleet scale.
+
+The paper's deployment target is ONE 59-spin COBI chip solving one instance
+per 200 us execution.  The reproduction's Pallas kernel pads that instance to
+128 TPU lanes, so a single solve leaves most of the MXU tile multiplying
+zeros, and serving a request batch used to be a sequential Python loop.  This
+package turns the solver into a *farm*:
+
+  * :mod:`repro.farm.packing` -- block-diagonally combines many independent
+    ≤59-spin instances into one lane-padded super-instance.  Each block is
+    pre-scaled by its own dynamics normalizer, so the packed trajectory
+    advances every block exactly as a solo anneal would (the zero cross-blocks
+    contribute exact float zeros to the matmuls), and per-block energies
+    unpack exactly.  First-fit packing in priority order keeps urgent jobs in
+    the earliest chip cycles.
+
+  * :mod:`repro.farm.scheduler` -- :class:`CobiFarm` accepts solve jobs with
+    priorities/deadlines and returns futures.  ``drain()`` groups jobs by
+    anneal schedule, packs them, pads the super-instance stack to a batch
+    bucket (shape-bucketing: jit recompiles scale with the bucket count, not
+    with request diversity), and runs ONE batched Pallas launch with grid
+    (instance, replica-block) -- the software picture of ``n_chips`` physical
+    COBI arrays each programmed once and executed R times.  Per-chip
+    occupancy plus the paper's 200 us / 25 mW per-execution model drive the
+    latency/energy receipts each future carries.
+
+Hardware analogue: a rack of CMOS Ising chips behind a queue.  Packing many
+small problems onto one all-to-all array is exactly how large-scale Ising
+machines (e.g. scalable all-to-all architectures) keep their spin fabric
+busy; the farm reproduces that resource model in simulation while the TPU
+gets dense MXU tiles instead of zero padding.
+"""
+
+from repro.farm.packing import PackedInstance, Slot, bucket_to, pack_instances  # noqa: F401
+from repro.farm.scheduler import (  # noqa: F401
+    BATCH_BUCKET,
+    REPLICA_BUCKET,
+    ChipStats,
+    CobiFarm,
+    FarmFuture,
+    FarmJob,
+    FarmStats,
+    JobReceipt,
+    solve_many,
+)

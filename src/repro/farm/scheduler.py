@@ -1,0 +1,388 @@
+"""COBI chip-farm scheduler: packed, prioritized, batched Ising solving.
+
+``CobiFarm`` simulates a farm of ``n_chips`` COBI chips, each with
+``lanes_per_chip`` spin lanes.  Jobs (one ≤59-spin integer Ising instance
+each) are submitted with a priority/deadline and return a :class:`FarmFuture`.
+``drain()`` flushes the queue:
+
+  1. jobs are grouped by anneal schedule ``(replica bucket, steps, dt,
+     ks_max)`` -- packed instances share one trajectory, so the schedule must
+     match;
+  2. within a group, jobs are sorted (priority desc, deadline asc, FIFO) and
+     first-fit packed into block-diagonal super-instances
+     (:mod:`repro.farm.packing`);
+  3. the super-instance stack is padded to a batch bucket and annealed by ONE
+     batched Pallas launch (`ops.cobi_trajectory_batch`), grid = (instance,
+     replica-block), each chip's J resident in VMEM;
+  4. unpacked per-job spins are re-scored against the original (h, J) in ONE
+     batched energy launch (`ops.ising_energy` on (B, R, N) stacks) --
+     bit-identical to solo scoring;
+  5. futures resolve to :class:`repro.solvers.base.SolverResult` plus a
+     :class:`JobReceipt` carrying the paper's latency/energy accounting.
+
+Hardware-time model: each super-instance occupies one chip for
+``replicas * seconds_per_solve`` (R sequential 200 us executions of the
+programmed array).  Bins are assigned round-robin to chips; a drain advances
+the simulated clock by the number of serialized cycles on the busiest chip.
+Job energy is the chip energy of its bin, attributed by lane share.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formulation import IsingProblem
+from repro.core.hardware import COBI, SolverHardware
+from repro.farm.packing import LANE, bucket_to, pack_instances
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.solvers.base import SolverResult
+from repro.solvers.cobi import COBI_MAX_SPINS, check_programmable
+
+Array = jax.Array
+
+BATCH_BUCKET = 4  # super-instance batches are padded to a multiple of this
+REPLICA_BUCKET = 8  # read counts are padded to a multiple of this
+
+
+@dataclasses.dataclass(frozen=True)
+class FarmJob:
+    job_id: int
+    ising: IsingProblem
+    key: Array
+    reads: int
+    steps: int
+    dt: float
+    ks_max: float
+    priority: int
+    deadline: Optional[float]
+    submit_sim_time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class JobReceipt:
+    """Simulated-hardware accounting for one completed job."""
+
+    job_id: int
+    chip_id: int
+    cycle: int  # global chip cycle the job's bin ran in
+    lanes: int  # spin lanes the job occupied
+    bin_occupancy: float  # lane utilization of its super-instance
+    sim_latency_seconds: float  # submit -> bin completion on the sim clock
+    chip_seconds: float  # chip busy time attributed to this job (lane share)
+    energy_joules: float  # chip energy attributed to this job
+
+
+@dataclasses.dataclass
+class ChipStats:
+    chip_id: int
+    solves: int = 0  # super-instance anneals executed
+    busy_seconds: float = 0.0
+    jobs: int = 0
+    lanes_used: int = 0  # summed over executed super-instances
+    lanes_capacity: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.lanes_used / self.lanes_capacity if self.lanes_capacity else 0.0
+
+
+@dataclasses.dataclass
+class FarmStats:
+    jobs_completed: int
+    super_instances: int
+    drains: int
+    sim_seconds: float
+    energy_joules: float
+    chips: List[ChipStats]
+
+    @property
+    def mean_occupancy(self) -> float:
+        used = sum(c.lanes_used for c in self.chips)
+        cap = sum(c.lanes_capacity for c in self.chips)
+        return used / cap if cap else 0.0
+
+
+class FarmFuture:
+    """Handle to a submitted job; ``result()`` lazily drains the farm."""
+
+    __slots__ = ("_farm", "job_id")
+
+    def __init__(self, farm: "CobiFarm", job_id: int):
+        self._farm = farm
+        self.job_id = job_id
+
+    def done(self) -> bool:
+        return self.job_id in self._farm._results
+
+    def result(self) -> SolverResult:
+        if not self.done():
+            self._farm.drain()
+        return self._farm._results[self.job_id]
+
+    def receipt(self) -> JobReceipt:
+        if not self.done():
+            self._farm.drain()
+        return self._farm._receipts[self.job_id]
+
+
+class CobiFarm:
+    """A virtual multi-chip COBI farm (see module docstring)."""
+
+    def __init__(
+        self,
+        n_chips: int = 4,
+        *,
+        lanes_per_chip: int = LANE,
+        max_spins: int = COBI_MAX_SPINS,
+        impl: str = "auto",
+        hardware: SolverHardware = COBI,
+        check: bool = True,
+    ):
+        if n_chips < 1:
+            raise ValueError(f"need >= 1 chip, got {n_chips}")
+        if lanes_per_chip % LANE != 0:
+            raise ValueError(f"lanes_per_chip must be a multiple of {LANE}")
+        self.n_chips = n_chips
+        self.lanes_per_chip = lanes_per_chip
+        self.max_spins = max_spins
+        self.impl = impl
+        self.hardware = hardware
+        self.check = check
+        self._ids = itertools.count()
+        self._pending: List[FarmJob] = []
+        self._jobs: Dict[int, FarmJob] = {}
+        self._results: Dict[int, SolverResult] = {}
+        self._receipts: Dict[int, JobReceipt] = {}
+        self._sim_time = 0.0
+        self._cycle = 0  # global chip-cycle counter
+        self._drains = 0
+        self._chips = [
+            ChipStats(chip_id=c) for c in range(n_chips)
+        ]
+
+    # ------------------------------------------------------------------ API
+
+    def submit(
+        self,
+        ising: IsingProblem,
+        key: Array,
+        *,
+        reads: int = 8,
+        steps: int = 400,
+        dt: float = 0.35,
+        ks_max: float = 1.2,
+        priority: int = 0,
+        deadline: Optional[float] = None,
+        check: Optional[bool] = None,
+    ) -> FarmFuture:
+        """Queue one anneal job; rejects instances the chip cannot hold."""
+        if ising.n > self.max_spins:
+            raise ValueError(
+                f"COBI farm chips hold <= {self.max_spins} spins, got {ising.n}; "
+                "decompose first (core.decomposition)"
+            )
+        do_check = self.check if check is None else check
+        if do_check:
+            check_programmable(ising, max_spins=self.max_spins)
+        job = FarmJob(
+            job_id=next(self._ids),
+            ising=ising,
+            key=key,
+            reads=int(reads),
+            steps=int(steps),
+            dt=float(dt),
+            ks_max=float(ks_max),
+            priority=int(priority),
+            deadline=deadline,
+            submit_sim_time=self._sim_time,
+        )
+        self._pending.append(job)
+        self._jobs[job.job_id] = job
+        return FarmFuture(self, job.job_id)
+
+    def drain(self) -> int:
+        """Pack and execute every pending job; returns the number completed."""
+        if not self._pending:
+            return 0
+        pending, self._pending = self._pending, []
+        groups: Dict[Tuple[int, int, float, float], List[FarmJob]] = {}
+        for job in pending:
+            gkey = (bucket_to(max(job.reads, 1), REPLICA_BUCKET), job.steps, job.dt,
+                    job.ks_max)
+            groups.setdefault(gkey, []).append(job)
+        for gkey in sorted(groups):
+            self._run_group(gkey, groups[gkey])
+        self._drains += 1
+        return len(pending)
+
+    def clear_completed(self) -> None:
+        """Drop results/receipts of completed jobs (chip stats are kept).
+
+        Futures of cleared jobs can no longer be read; callers that own a
+        long-lived farm (the serving engine) call this once per batch after
+        consuming every future, so sustained load stays memory-bounded.
+        """
+        self._results.clear()
+        self._receipts.clear()
+        pending_ids = {j.job_id for j in self._pending}
+        self._jobs = {jid: j for jid, j in self._jobs.items() if jid in pending_ids}
+
+    def stats(self) -> FarmStats:
+        return FarmStats(
+            jobs_completed=len(self._results),
+            super_instances=sum(c.solves for c in self._chips),
+            drains=self._drains,
+            sim_seconds=self._sim_time,
+            energy_joules=sum(c.busy_seconds for c in self._chips)
+            * self.hardware.solver_power_w,
+            chips=list(self._chips),
+        )
+
+    # ------------------------------------------------------------ internals
+
+    def _run_group(self, gkey: Tuple[int, int, float, float], jobs: List[FarmJob]):
+        r_bucket, steps, dt, ks_max = gkey
+        # Priority/deadline first (urgent jobs reach the earliest chip
+        # cycles), then size-decreasing: first-fit-decreasing within a
+        # priority class packs the lanes measurably denser.
+        order = sorted(
+            jobs,
+            key=lambda j: (-j.priority, j.deadline if j.deadline is not None
+                           else math.inf, -j.ising.n, j.job_id),
+        )
+        bins = pack_instances([(j.job_id, j.ising) for j in order],
+                              capacity=self.lanes_per_chip)
+        by_id = {j.job_id: j for j in jobs}
+
+        b_real = len(bins)
+        b_pad = bucket_to(b_real, BATCH_BUCKET)
+        L = self.lanes_per_chip
+        slots = [(b, slot) for b, inst in enumerate(bins) for slot in inst.slots]
+        hp = np.zeros((b_pad, L), np.float32)
+        jp = np.zeros((b_pad, L, L), np.float32)
+        phi0 = np.zeros((b_pad, r_bucket, L), np.float32)
+        for b, inst in enumerate(bins):
+            hp[b] = inst.h_scaled
+            jp[b] = inst.j_scaled
+        # Per-job phases from the job's own key -- results are reproducible
+        # regardless of which jobs share a bin -- drawn in ONE launch for the
+        # whole group (key count bucketed to keep the jit cache small).
+        keys = [by_id[slot.job_id].key for _, slot in slots]
+        k_pad = bucket_to(len(keys), REPLICA_BUCKET)
+        keys += [jax.random.key(0)] * (k_pad - len(keys))
+        draws = np.asarray(
+            _phi0_from_keys(jnp.stack(keys), r=r_bucket, lanes=L)
+        )
+        for idx, (b, slot) in enumerate(slots):
+            phi0[b, :, slot.offset : slot.offset + slot.n] = draws[idx, :, : slot.n]
+
+        phi = ops.cobi_trajectory_batch(
+            jnp.asarray(jp), jnp.asarray(hp), jnp.asarray(phi0),
+            steps=steps, dt=dt, ks_max=ks_max, impl=self.impl,
+        )
+        spins_packed = np.asarray(kref.ref_cobi_spins(phi))  # (B, R, L) int8
+
+        # One batched energy launch scores every job against its ORIGINAL
+        # (h, J); per-job spins sit at lane offset 0, exactly like the solo
+        # ops.ising_energy padding path, so scores match solo bit-for-bit.
+        n_jobs = len(slots)
+        # Pad scoring to the same lane multiple the solo ops.ising_energy
+        # path would use for the group's largest job (usually one 128-lane
+        # tile; more when the farm is configured for >128-spin chips).
+        score_n = bucket_to(max(max(s.n for _, s in slots), LANE), LANE)
+        s_stack = np.zeros((n_jobs, r_bucket, score_n), np.float32)
+        h_stack = np.zeros((n_jobs, score_n), np.float32)
+        j_stack = np.zeros((n_jobs, score_n, score_n), np.float32)
+        for k, (b, slot) in enumerate(slots):
+            job = by_id[slot.job_id]
+            s_stack[k, :, : slot.n] = spins_packed[b, :, slot.offset : slot.offset + slot.n]
+            h_stack[k, : slot.n] = np.asarray(job.ising.h, np.float32)
+            j_stack[k, : slot.n, : slot.n] = np.asarray(job.ising.j, np.float32)
+        energies = np.asarray(
+            ops.ising_energy(
+                jnp.asarray(s_stack), jnp.asarray(h_stack), jnp.asarray(j_stack),
+                impl=self.impl,
+            )
+        )  # (n_jobs, r_bucket)
+
+        # Simulated hardware accounting: bins round-robin over chips, each
+        # occupying its chip for r_bucket sequential executions.
+        hw = self.hardware
+        bin_seconds = r_bucket * hw.seconds_per_solve
+        cycles = math.ceil(b_real / self.n_chips)
+        t0 = self._sim_time
+        bin_completion = {}
+        for b, inst in enumerate(bins):
+            chip = self._chips[b % self.n_chips]
+            cycle_in_drain = b // self.n_chips
+            bin_completion[b] = t0 + (cycle_in_drain + 1) * bin_seconds
+            chip.solves += 1
+            chip.busy_seconds += bin_seconds
+            chip.jobs += len(inst.slots)
+            chip.lanes_used += inst.lanes_used
+            chip.lanes_capacity += inst.capacity
+        self._sim_time = t0 + cycles * bin_seconds
+        self._cycle += cycles
+
+        for k, (b, slot) in enumerate(slots):
+            job = by_id[slot.job_id]
+            inst = bins[b]
+            share = slot.n / inst.lanes_used
+            # Host arrays: the reduce that consumes these is numpy, and 100s
+            # of per-job device_puts were measurable at farm throughput.
+            # Copies, not views -- a view would pin the whole packed batch
+            # in memory for as long as the result is retained.
+            self._results[job.job_id] = SolverResult(
+                spins=spins_packed[
+                    b, : job.reads, slot.offset : slot.offset + slot.n
+                ].copy(),
+                energies=energies[k, : job.reads].copy(),
+            )
+            self._receipts[job.job_id] = JobReceipt(
+                job_id=job.job_id,
+                chip_id=b % self.n_chips,
+                cycle=self._cycle - cycles + b // self.n_chips,
+                lanes=slot.n,
+                bin_occupancy=inst.occupancy,
+                sim_latency_seconds=bin_completion[b] - job.submit_sim_time,
+                chip_seconds=bin_seconds * share,
+                energy_joules=bin_seconds * share * hw.solver_power_w,
+            )
+
+
+@functools.partial(jax.jit, static_argnames=("r", "lanes"))
+def _phi0_from_keys(keys: Array, *, r: int, lanes: int) -> Array:
+    """(K,) keys -> (K, r, lanes) uniform phases; job k uses [:, :n_k]."""
+    draw = lambda k: jax.random.uniform(k, (r, lanes), jnp.float32, 0.0, 2.0 * jnp.pi)
+    return jax.vmap(draw)(keys)
+
+
+def solve_many(
+    instances: Sequence[IsingProblem],
+    keys: Sequence[Array],
+    *,
+    n_chips: int = 4,
+    reads: int = 8,
+    steps: int = 400,
+    dt: float = 0.35,
+    ks_max: float = 1.2,
+    impl: str = "auto",
+    check: bool = True,
+) -> List[SolverResult]:
+    """One-shot convenience: pack + solve a list of instances on a fresh farm."""
+    farm = CobiFarm(n_chips, impl=impl, check=check)
+    futures = [
+        farm.submit(ising, key, reads=reads, steps=steps, dt=dt, ks_max=ks_max)
+        for ising, key in zip(instances, keys)
+    ]
+    farm.drain()
+    return [f.result() for f in futures]

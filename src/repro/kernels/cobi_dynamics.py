@@ -29,10 +29,9 @@ LANE = 128  # f32 lane tile on TPU
 DEFAULT_REPLICA_BLOCK = 256
 
 
-def _cobi_kernel(j_ref, h_ref, phi_ref, out_ref, *, steps: int, dt: float, ks_max: float):
-    j = j_ref[...]  # (N, N) resident across the time loop
-    h = h_ref[...]  # (1, N)
-    phi = phi_ref[...]  # (BR, N)
+def _anneal_loop(j, h, phi, *, steps: int, dt: float, ks_max: float):
+    """Shared Euler loop: identical op sequence in the single and batched
+    kernels so a block-diagonal packed instance reproduces the solo math."""
 
     def step(t, phi):
         s = jnp.sin(phi)
@@ -43,7 +42,23 @@ def _cobi_kernel(j_ref, h_ref, phi_ref, out_ref, *, steps: int, dt: float, ks_ma
         ks = ks_max * (t.astype(jnp.float32) + 1.0) / steps
         return phi + dt * (grad - ks * jnp.sin(2.0 * phi))
 
-    out_ref[...] = jax.lax.fori_loop(0, steps, step, phi)
+    return jax.lax.fori_loop(0, steps, step, phi)
+
+
+def _cobi_kernel(j_ref, h_ref, phi_ref, out_ref, *, steps: int, dt: float, ks_max: float):
+    j = j_ref[...]  # (N, N) resident across the time loop
+    h = h_ref[...]  # (1, N)
+    phi = phi_ref[...]  # (BR, N)
+    out_ref[...] = _anneal_loop(j, h, phi, steps=steps, dt=dt, ks_max=ks_max)
+
+
+def _cobi_batched_kernel(
+    j_ref, h_ref, phi_ref, out_ref, *, steps: int, dt: float, ks_max: float
+):
+    j = j_ref[0]  # (N, N) — this instance's couplings, resident across replicas
+    h = h_ref[0]  # (1, N)
+    phi = phi_ref[0]  # (BR, N)
+    out_ref[0] = _anneal_loop(j, h, phi, steps=steps, dt=dt, ks_max=ks_max)
 
 
 def cobi_trajectory_pallas(
@@ -72,5 +87,43 @@ def cobi_trajectory_pallas(
         ],
         out_specs=pl.BlockSpec((replica_block, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(j_scaled.astype(jnp.float32), h_scaled.astype(jnp.float32), phi0.astype(jnp.float32))
+
+
+def cobi_trajectory_batched_pallas(
+    j_scaled: Array,  # (B, N, N) pre-scaled stack of instance couplings
+    h_scaled: Array,  # (B, 1, N)
+    phi0: Array,  # (B, R, N) with R a multiple of the replica block
+    *,
+    steps: int,
+    dt: float,
+    ks_max: float,
+    replica_block: int = DEFAULT_REPLICA_BLOCK,
+    interpret: bool = False,
+) -> Array:
+    """Anneal a stack of B independent instances in one kernel launch.
+
+    Grid is (instance, replica-block) with the replica dimension innermost, so
+    each instance's J/h stay resident in VMEM while its replica blocks stream
+    through — the chip-farm analogue of B physical COBI arrays annealing in
+    parallel, each programmed once and executed R times.
+    """
+    b, r, n = phi0.shape
+    assert n % LANE == 0 and (b, n, n) == j_scaled.shape, (phi0.shape, j_scaled.shape)
+    assert h_scaled.shape == (b, 1, n), h_scaled.shape
+    assert r % replica_block == 0, (r, replica_block)
+    grid = (b, r // replica_block)
+    kernel = functools.partial(_cobi_batched_kernel, steps=steps, dt=dt, ks_max=ks_max)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda bi, i: (bi, 0, 0)),  # J resident per instance
+            pl.BlockSpec((1, 1, n), lambda bi, i: (bi, 0, 0)),
+            pl.BlockSpec((1, replica_block, n), lambda bi, i: (bi, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, replica_block, n), lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, n), jnp.float32),
         interpret=interpret,
     )(j_scaled.astype(jnp.float32), h_scaled.astype(jnp.float32), phi0.astype(jnp.float32))

@@ -19,8 +19,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as kref
-from repro.kernels.cobi_dynamics import LANE, cobi_trajectory_pallas
-from repro.kernels.ising_energy import ising_energy_pallas
+from repro.kernels.cobi_dynamics import (
+    LANE,
+    cobi_trajectory_batched_pallas,
+    cobi_trajectory_pallas,
+)
+from repro.kernels.ising_energy import ising_energy_batched_pallas, ising_energy_pallas
 
 Array = jax.Array
 
@@ -85,6 +89,95 @@ def cobi_anneal(
     return spins, energies
 
 
+@functools.partial(
+    jax.jit, static_argnames=("steps", "dt", "ks_max", "impl", "replica_block")
+)
+def cobi_trajectory_batch(
+    j_scaled: Array,  # (B, N, N) pre-scaled stack (block-diagonal packs welcome)
+    h_scaled: Array,  # (B, N)
+    phi0: Array,  # (B, R, N) initial phases
+    *,
+    steps: int,
+    dt: float,
+    ks_max: float,
+    impl: str = "auto",
+    replica_block: int = 256,
+) -> Array:
+    """Anneal B independent (possibly packed) instances in one launch.
+
+    The farm pre-scales each block-diagonal sub-block by its own
+    ``dynamics_scale`` before packing, so a packed instance's dynamics match
+    the instance-at-a-time path block by block.  Returns final phases
+    (B, R, N).
+    """
+    b, r, n = phi0.shape
+    n_pad = _pad_to(max(n, LANE), LANE)
+    r_block = min(replica_block, _pad_to(r, 8))
+    r_pad = _pad_to(r, r_block)
+    jp = jnp.zeros((b, n_pad, n_pad), jnp.float32).at[:, :n, :n].set(
+        jnp.asarray(j_scaled, jnp.float32)
+    )
+    hp = jnp.zeros((b, 1, n_pad), jnp.float32).at[:, 0, :n].set(
+        jnp.asarray(h_scaled, jnp.float32)
+    )
+    pp = jnp.zeros((b, r_pad, n_pad), jnp.float32).at[:, :r, :n].set(
+        jnp.asarray(phi0, jnp.float32)
+    )
+    if impl == "ref":
+        phi = kref.ref_cobi_trajectory_batched(
+            jp, hp[:, 0], pp, steps=steps, dt=dt, ks_max=ks_max
+        )
+    else:
+        phi = cobi_trajectory_batched_pallas(
+            jp, hp, pp, steps=steps, dt=dt, ks_max=ks_max,
+            replica_block=r_block, interpret=_on_cpu(),
+        )
+    return phi[:, :r, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "replicas", "steps", "dt", "ks_max", "impl", "replica_block", "prescaled"
+    ),
+)
+def cobi_anneal_batch(
+    h: Array,  # (B, N)
+    j: Array,  # (B, N, N)
+    key: Array,
+    *,
+    replicas: int = 256,
+    steps: int = 300,
+    dt: float = 0.35,
+    ks_max: float = 1.0,
+    impl: str = "auto",
+    replica_block: int = 256,
+    prescaled: bool = False,
+) -> Tuple[Array, Array]:
+    """Batched :func:`cobi_anneal` over a stack of B instances.
+
+    Returns (spins (B, R, N) int8 in {-1,+1}, energies (B, R) f32 of the
+    *given* problems).  ``prescaled=True`` skips the per-instance dynamics
+    normalization (the farm packer applies it per block before packing).
+    """
+    b, n = h.shape
+    if prescaled:
+        j_s = jnp.asarray(j, jnp.float32)
+        h_s = jnp.asarray(h, jnp.float32)
+    else:
+        scale = jax.vmap(dynamics_scale)(h, j)  # (B,)
+        j_s = jnp.asarray(j, jnp.float32) / scale[:, None, None]
+        h_s = jnp.asarray(h, jnp.float32) / scale[:, None]
+    phi0 = jax.random.uniform(key, (b, replicas, n), jnp.float32, 0.0, 2.0 * jnp.pi)
+    phi = cobi_trajectory_batch(
+        j_s, h_s, phi0, steps=steps, dt=dt, ks_max=ks_max,
+        impl=impl, replica_block=replica_block,
+    )
+    spins = kref.ref_cobi_spins(phi)
+    energies = ising_energy(spins, h, j, impl=impl)
+    return spins, energies
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "replica_block"))
 def ising_energy(
     spins: Array,
@@ -94,8 +187,18 @@ def ising_energy(
     impl: str = "auto",
     replica_block: int = 512,
 ) -> Array:
-    """Batched Ising energies for (R, N) spins in {-1, +1}. Returns (R,) f32."""
+    """Batched Ising energies for spins in {-1, +1}.
+
+    Two layouts:
+      * (R, N) or (N,) spins against one instance ``h (N,), j (N, N)`` ->
+        (R,) / scalar f32 (the original API);
+      * (B, R, N) spins against a stack ``h (B, N), j (B, N, N)`` -> (B, R)
+        f32, scored by the batched Pallas kernel in a single launch (the
+        chip-farm path: no per-instance Python loop).
+    """
     spins = jnp.asarray(spins)
+    if spins.ndim == 3:
+        return _ising_energy_stacked(spins, h, j, impl=impl, replica_block=replica_block)
     squeeze = spins.ndim == 1
     if squeeze:
         spins = spins[None]
@@ -112,6 +215,33 @@ def ising_energy(
     e = ising_energy_pallas(sp, hp, jp, replica_block=r_block, interpret=_on_cpu())
     e = e[:r]
     return e[0] if squeeze else e
+
+
+def _ising_energy_stacked(
+    spins: Array, h: Array, j: Array, *, impl: str, replica_block: int
+) -> Array:
+    b, r, n = spins.shape
+    assert h.shape == (b, n) and j.shape == (b, n, n), (spins.shape, h.shape, j.shape)
+    # "auto" on CPU takes the einsum oracle: interpret-mode overhead is per
+    # grid point and the stacked grid has B of them.  For the chip regime
+    # (integer couplings, +-1 spins) every partial sum is f32-exact, so the
+    # oracle is bit-identical to the kernel; use impl="pallas" to force it.
+    if impl == "ref" or (impl == "auto" and _on_cpu()):
+        return kref.ref_ising_energy_batched(spins, h, j)
+    n_pad = _pad_to(max(n, LANE), LANE)
+    r_block = min(replica_block, _pad_to(r, 8))
+    r_pad = _pad_to(r, r_block)
+    sp = jnp.zeros((b, r_pad, n_pad), jnp.float32).at[:, :r, :n].set(
+        spins.astype(jnp.float32)
+    )
+    hp = jnp.zeros((b, 1, n_pad), jnp.float32).at[:, 0, :n].set(
+        jnp.asarray(h, jnp.float32)
+    )
+    jp = jnp.zeros((b, n_pad, n_pad), jnp.float32).at[:, :n, :n].set(
+        jnp.asarray(j, jnp.float32)
+    )
+    e = ising_energy_batched_pallas(sp, hp, jp, replica_block=r_block, interpret=_on_cpu())
+    return e[:, :r]
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, impl: str = "auto"):

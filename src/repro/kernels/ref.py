@@ -57,6 +57,20 @@ def ref_cobi_spins(phi: Array) -> Array:
     return jnp.where(jnp.cos(phi) >= 0.0, 1, -1).astype(jnp.int8)
 
 
+def ref_cobi_trajectory_batched(
+    j_scaled: Array,  # (B, N, N)
+    h_scaled: Array,  # (B, N)
+    phi0: Array,  # (B, R, N)
+    *,
+    steps: int,
+    dt: float,
+    ks_max: float,
+) -> Array:
+    """vmap of :func:`ref_cobi_trajectory` over a stack of B instances."""
+    traj = lambda j, h, p: ref_cobi_trajectory(j, h, p, steps=steps, dt=dt, ks_max=ks_max)
+    return jax.vmap(traj)(j_scaled, h_scaled, phi0)
+
+
 # ---------------------------------------------------------------------------
 # Batched Ising energy
 # ---------------------------------------------------------------------------
@@ -68,6 +82,14 @@ def ref_ising_energy(spins: Array, h: Array, j: Array) -> Array:
     return s @ h.astype(jnp.float32) + jnp.einsum(
         "ri,ij,rj->r", s, j.astype(jnp.float32), s
     )
+
+
+def ref_ising_energy_batched(spins: Array, h: Array, j: Array) -> Array:
+    """E_br for (B, R, N) spins against per-instance (B, N) h, (B, N, N) J."""
+    s = spins.astype(jnp.float32)
+    lin = jnp.einsum("brn,bn->br", s, h.astype(jnp.float32))
+    quad = jnp.einsum("bri,bij,brj->br", s, j.astype(jnp.float32), s)
+    return lin + quad
 
 
 # ---------------------------------------------------------------------------

@@ -60,3 +60,31 @@ def solve(
         impl=impl,
     )
     return SolverResult(spins=spins, energies=energies)
+
+
+def solve_batch(
+    instances,
+    keys,
+    *,
+    n_chips: int = 4,
+    reads: int = 8,
+    steps: int = 400,
+    dt: float = 0.35,
+    ks_max: float = 1.2,
+    impl: str = "auto",
+    check: bool = True,
+) -> "list[SolverResult]":
+    """Solve many instances at once on a virtual chip farm.
+
+    Block-diagonally packs the instances onto ``n_chips`` simulated COBI
+    chips and anneals them in one batched kernel launch (see ``repro.farm``);
+    results are per-instance and bit-identical to what each instance would
+    get from the farm alone.  For scheduling control (priorities, deadlines,
+    streaming submission) use ``repro.farm.CobiFarm`` directly.
+    """
+    from repro.farm import solve_many  # farm imports this module; lazy import
+
+    return solve_many(
+        instances, keys, n_chips=n_chips, reads=reads, steps=steps,
+        dt=dt, ks_max=ks_max, impl=impl, check=check,
+    )

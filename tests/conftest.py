@@ -4,7 +4,10 @@ import os
 # in a subprocess); keep any inherited XLA_FLAGS from leaking in.
 os.environ.pop("XLA_FLAGS", None)
 
-from hypothesis import settings
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:  # property tests importorskip hypothesis themselves
+    pass
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

@@ -92,3 +92,28 @@ def test_engine_short_doc_passthrough():
     eng = SummarizationEngine()
     (resp,) = eng.run_batch([eng.submit("One sentence only.", m=6)])
     assert resp.summary == ["One sentence only."]
+
+
+def test_engine_duplicate_request_ids_all_served():
+    """Hand-built requests may share request_id=0; every one must be solved."""
+    from repro.serving import SummarizeRequest
+
+    doc_a = " ".join(synthetic_document(11, 12))
+    doc_b = " ".join(synthetic_document(12, 14))
+    eng = SummarizationEngine(
+        SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14, steps=150)
+    )
+    ra, rb = eng.run_batch(
+        [SummarizeRequest(text=doc_a, m=3), SummarizeRequest(text=doc_b, m=3)]
+    )
+    assert len(ra.summary) == 3 and len(rb.summary) == 3
+    assert ra.summary != rb.summary  # each request got its own solve
+
+
+def test_engine_farm_cleared_between_batches():
+    eng = SummarizationEngine(
+        SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14, steps=150)
+    )
+    doc = " ".join(synthetic_document(13, 12))
+    eng.run_batch([eng.submit(doc, m=3)])
+    assert eng.farm is not None and not eng.farm._results  # bounded under load

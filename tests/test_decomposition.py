@@ -3,6 +3,7 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SolveConfig, solve_es

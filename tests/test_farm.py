@@ -1,0 +1,263 @@
+"""Chip-farm packing invariants: block-diagonal packs must be EXACTLY the
+instances they contain -- energies bit-for-bit after unpacking, ragged bucket
+padding inert, oversized instances rejected -- plus scheduler accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formulation import IsingProblem
+from repro.farm import BATCH_BUCKET, CobiFarm, pack_instances, solve_many
+from repro.kernels import ops
+from repro.solvers.cobi import COBI_MAX_SPINS
+
+
+def _instance(seed, n):
+    kh, kj = jax.random.split(jax.random.key(seed))
+    h = jax.random.randint(kh, (n,), -14, 15).astype(jnp.float32)
+    j = jax.random.randint(kj, (n, n), -14, 15).astype(jnp.float32)
+    j = jnp.triu(j, 1)
+    return IsingProblem(h=h, j=j + j.T)
+
+
+# ---------------------------------------------------------------- packing
+
+
+def test_pack_first_fit_disjoint_lanes():
+    sizes = [59, 40, 20, 12, 59, 33, 7]
+    bins = pack_instances([(i, _instance(i, n)) for i, n in enumerate(sizes)], 128)
+    seen = set()
+    for inst in bins:
+        taken = []
+        for slot in inst.slots:
+            taken.extend(range(slot.offset, slot.offset + slot.n))
+            assert slot.job_id not in seen
+            seen.add(slot.job_id)
+        assert len(taken) == len(set(taken)) == inst.lanes_used  # disjoint lanes
+        assert 0 < inst.occupancy <= 1.0
+    assert seen == set(range(len(sizes)))
+    # first-fit on this sequence: 59+40+20+7 = 126 fill the first bin
+    assert bins[0].lanes_used == 126
+
+
+def test_pack_rejects_oversized_and_bad_capacity():
+    with pytest.raises(ValueError):
+        pack_instances([(0, _instance(0, 200))], 128)
+    with pytest.raises(ValueError):
+        pack_instances([(0, _instance(0, 10))], 100)  # not a lane multiple
+
+
+def test_pack_block_diagonal_is_exact():
+    """The packed (h, J) restricted to a slot equals the instance's scaled
+    coefficients; everything off the blocks is exactly zero."""
+    sizes = [30, 25, 40]
+    probs = [_instance(i, n) for i, n in enumerate(sizes)]
+    (inst,) = pack_instances(list(enumerate(probs)), 128)
+    mask = np.zeros((128, 128), bool)
+    for slot, p in zip(inst.slots, probs):
+        s = slice(slot.offset, slot.offset + slot.n)
+        scale = np.float32(slot.scale)
+        np.testing.assert_array_equal(
+            inst.h_scaled[s], np.asarray(p.h, np.float32) / scale
+        )
+        np.testing.assert_array_equal(
+            inst.j_scaled[s, s], np.asarray(p.j, np.float32) / scale
+        )
+        mask[s, s] = True
+    assert np.all(inst.j_scaled[~mask] == 0.0)
+
+
+# ------------------------------------------------- packed-solve invariants
+
+
+def test_packed_energies_match_per_instance_exactly():
+    """Farm-reported energies == solo re-scoring of the unpacked spins,
+    bit for bit (the acceptance-criterion invariant)."""
+    sizes = [59, 40, 20, 12, 59, 33]  # ragged: bins won't fill evenly
+    probs = [_instance(i, n) for i, n in enumerate(sizes)]
+    farm = CobiFarm(n_chips=2)
+    futs = [
+        farm.submit(p, jax.random.fold_in(jax.random.key(0), i), reads=8, steps=120)
+        for i, p in enumerate(probs)
+    ]
+    farm.drain()
+    for i, (p, fut) in enumerate(zip(probs, futs)):
+        res = fut.result()
+        assert res.spins.shape == (8, p.n)
+        assert set(np.unique(np.asarray(res.spins))) <= {-1, 1}
+        solo = np.asarray(ops.ising_energy(res.spins, p.h, p.j))
+        np.testing.assert_array_equal(solo, np.asarray(res.energies), err_msg=str(i))
+
+
+def test_packed_job_independent_of_binmates():
+    """Same job + key -> bitwise-identical spins/energies whether it anneals
+    alone or packed at a nonzero lane offset with other jobs."""
+    p = _instance(3, 41)
+    key = jax.random.key(11)
+
+    farm_solo = CobiFarm(1)
+    fut_solo = farm_solo.submit(p, key, reads=8, steps=150)
+    farm_solo.drain()
+
+    farm_packed = CobiFarm(1)
+    farm_packed.submit(_instance(50, 59), jax.random.key(99), reads=8, steps=150)
+    fut_packed = farm_packed.submit(p, key, reads=8, steps=150)  # offset 59
+    farm_packed.submit(_instance(51, 20), jax.random.key(98), reads=8, steps=150)
+    farm_packed.drain()
+
+    np.testing.assert_array_equal(
+        np.asarray(fut_solo.result().spins), np.asarray(fut_packed.result().spins)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fut_solo.result().energies),
+        np.asarray(fut_packed.result().energies),
+    )
+
+
+def test_ragged_batch_bucket_padding_is_inert():
+    """A lone job forces batch padding to BATCH_BUCKET super-instances; the
+    zero-padded instances must not perturb results or chip accounting."""
+    p = _instance(7, 23)
+    farm = CobiFarm(n_chips=4)
+    fut = farm.submit(p, jax.random.key(5), reads=6, steps=100)
+    farm.drain()
+    res = fut.result()
+    assert res.spins.shape == (6, 23)
+    np.testing.assert_array_equal(
+        np.asarray(ops.ising_energy(res.spins, p.h, p.j)), np.asarray(res.energies)
+    )
+    stats = farm.stats()
+    assert stats.super_instances == 1  # padded dummies are not chip work
+    assert stats.jobs_completed == 1
+    assert BATCH_BUCKET > 1  # the padding path was actually exercised
+
+
+def test_rejects_oversized_and_unprogrammable():
+    farm = CobiFarm(1)
+    key = jax.random.key(0)
+    with pytest.raises(ValueError, match="spins"):
+        farm.submit(_instance(0, COBI_MAX_SPINS + 1), key)
+    with pytest.raises(ValueError, match="integer"):
+        farm.submit(
+            IsingProblem(h=jnp.array([0.5, 0.25]), j=jnp.zeros((2, 2))), key
+        )
+    # unchecked submission is allowed for FP experiments
+    fut = farm.submit(
+        IsingProblem(h=jnp.array([0.5, 0.25]), j=jnp.zeros((2, 2))), key, check=False
+    )
+    farm.drain()
+    assert fut.result().spins.shape == (8, 2)
+
+
+# ------------------------------------------------------------- scheduler
+
+
+def test_priority_lands_in_earlier_cycle():
+    """With one chip and three 59-spin jobs (2 bins), the high-priority
+    late submission must run in the first chip cycle."""
+    farm = CobiFarm(n_chips=1)
+    futs = [
+        farm.submit(_instance(i, 59), jax.random.key(i), reads=8, steps=80,
+                    priority=(10 if i == 2 else 0))
+        for i in range(3)
+    ]
+    farm.drain()
+    receipts = [f.receipt() for f in futs]
+    assert receipts[2].cycle == 0
+    assert max(r.cycle for r in receipts) == 1  # two serialized cycles on 1 chip
+    assert receipts[2].sim_latency_seconds < max(
+        r.sim_latency_seconds for r in receipts
+    )
+
+
+def test_incompatible_schedules_run_in_separate_groups():
+    farm = CobiFarm(n_chips=2)
+    f1 = farm.submit(_instance(0, 20), jax.random.key(0), reads=8, steps=60)
+    f2 = farm.submit(_instance(1, 20), jax.random.key(1), reads=8, steps=90)
+    assert farm.drain() == 2
+    assert f1.done() and f2.done()
+    assert farm.stats().super_instances == 2  # schedules cannot share a pack
+
+
+def test_future_result_lazily_drains():
+    farm = CobiFarm(1)
+    fut = farm.submit(_instance(2, 16), jax.random.key(2), reads=8, steps=60)
+    assert not fut.done()
+    res = fut.result()  # implicit drain
+    assert fut.done() and res.energies.shape == (8,)
+
+
+def test_chip_occupancy_and_energy_accounting():
+    farm = CobiFarm(n_chips=2)
+    sizes = [59, 59, 59, 59]  # 2 bins of 2 jobs each
+    futs = [
+        farm.submit(_instance(i, n), jax.random.key(i), reads=8, steps=60)
+        for i, n in enumerate(sizes)
+    ]
+    farm.drain()
+    stats = farm.stats()
+    assert stats.super_instances == 2
+    assert 0.9 < stats.mean_occupancy <= 1.0  # 118/128 lanes
+    # energy attribution: job shares within a bin sum to the bin's energy
+    per_job = sum(f.receipt().energy_joules for f in futs)
+    assert per_job == pytest.approx(stats.energy_joules)
+
+
+def test_solve_many_convenience():
+    probs = [_instance(i, n) for i, n in enumerate([12, 30, 59])]
+    keys = [jax.random.fold_in(jax.random.key(1), i) for i in range(3)]
+    results = solve_many(probs, keys, n_chips=2, reads=6, steps=80)
+    for p, res in zip(probs, results):
+        assert res.spins.shape == (6, p.n)
+        np.testing.assert_array_equal(
+            np.asarray(ops.ising_energy(res.spins, p.h, p.j)),
+            np.asarray(res.energies),
+        )
+
+
+def test_wide_chip_scores_jobs_beyond_one_tile():
+    """A farm configured for >128-spin chips must score >128-spin jobs."""
+    p = _instance(8, 150)
+    farm = CobiFarm(1, lanes_per_chip=256, max_spins=200, check=False)
+    fut = farm.submit(p, jax.random.key(3), reads=8, steps=60)
+    farm.drain()
+    res = fut.result()
+    assert res.spins.shape == (8, 150)
+    np.testing.assert_array_equal(
+        np.asarray(ops.ising_energy(res.spins, p.h, p.j)), np.asarray(res.energies)
+    )
+
+
+def test_clear_completed_bounds_memory():
+    farm = CobiFarm(1)
+    fut = farm.submit(_instance(4, 30), jax.random.key(4), reads=8, steps=60)
+    farm.drain()
+    spins = fut.result().spins
+    assert spins.base is None  # a copy, not a view pinning the packed batch
+    farm.clear_completed()
+    assert not farm._results and not farm._jobs
+    with pytest.raises(KeyError):
+        fut.result()  # cleared futures are no longer readable
+    # farm stays usable afterwards
+    fut2 = farm.submit(_instance(5, 30), jax.random.key(5), reads=8, steps=60)
+    farm.drain()
+    assert fut2.result().spins.shape == (8, 30)
+
+
+def test_batched_ising_energy_matches_per_instance_bitwise():
+    """ops.ising_energy on (B, R, N) stacks == per-instance calls, exactly."""
+    key = jax.random.key(4)
+    B, R, N = 5, 16, 47
+    kh, kj, ks = jax.random.split(key, 3)
+    h = jax.random.randint(kh, (B, N), -14, 15).astype(jnp.float32)
+    j = jax.random.randint(kj, (B, N, N), -14, 15).astype(jnp.float32)
+    j = jnp.triu(j, 1)
+    j = j + jnp.swapaxes(j, 1, 2)
+    spins = jnp.where(jax.random.bernoulli(ks, 0.5, (B, R, N)), 1, -1).astype(jnp.int8)
+    batched = np.asarray(ops.ising_energy(spins, h, j))
+    assert batched.shape == (B, R)
+    for b in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(ops.ising_energy(spins[b], h[b], j[b])), batched[b]
+        )

@@ -2,6 +2,9 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.formulation import QuboProblem, qubo_energy, qubo_to_ising
