@@ -4,17 +4,32 @@ Serves the same 16-request mixed-size batch (a) through the legacy
 one-solve-per-kernel-launch path (engine with the farm disabled) and (b)
 through the CobiFarm at 1 / 4 / 16 simulated chips, where every round's jobs
 across all requests are packed block-diagonally and annealed by one batched
-Pallas launch.  Emits requests/sec, projected solver-seconds-per-request
-(the paper's hardware model), and the packed-vs-loop speedup.
+Pallas launch with the fused anneal→readout→best-of epilogue.  A heavy-tailed
+size/read mix then exercises the best-fit-decreasing + replica-tier packer.
+
+Emits requests/sec, projected solver-seconds-per-request (the paper's
+hardware model), packed-vs-loop speedup, lane occupancy, and host↔device
+bytes-per-request (the fused epilogue's O(lanes)-per-instance transfer story,
+visible here rather than only in wall-clock).
+
+CLI: ``--tiny`` shrinks sizes/steps/iterations for CI smoke runs; ``--json
+PATH`` additionally dumps every metric to a JSON file (uploaded as a CI
+artifact so the perf trajectory accumulates per commit).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 from benchmarks.common import emit
 
 SIZES = [10, 14, 18, 22, 26, 30, 34, 38, 12, 16, 20, 24, 28, 32, 36, 40]
+# Heavy-tailed mix: many small requests, a few near-chip-capacity ones, with
+# read counts spanning two replica tiers (8-ish and 48).
+HEAVY_SIZES = [8, 9, 10, 11, 12, 13, 14, 9, 10, 11, 12, 30, 34, 42, 55, 16]
+HEAVY_READS = [8, 8, 6, 8, 8, 6, 8, 8, 48, 48, 8, 8, 6, 8, 8, 8]
 
 
 def _engine(cfg, n_chips):
@@ -28,36 +43,126 @@ def _serve(engine, docs, seed=0):
     return engine.run_batch(reqs, seed=seed)
 
 
-def run() -> None:
+def _emit(results, name, us, derived, **metrics):
+    results[name] = {"us_per_call": us, "derived": derived, **metrics}
+    emit(name, us, derived)
+
+
+def run(tiny: bool = False, json_path: str | None = None) -> dict:
+    import jax
+
     from repro.core import SolveConfig
     from repro.data.synthetic import synthetic_document
+    from repro.farm import CobiFarm
+    from repro.solvers.cobi import check_programmable
 
     # Serving defaults: engine ships iterations=6; steps=400 is the COBI
     # solver default anneal length.
-    cfg = SolveConfig(solver="cobi", iterations=6, reads=8, int_range=14, steps=400)
-    docs = [
-        " ".join(synthetic_document(100 + i, n)) for i, n in enumerate(SIZES)
-    ]
+    steps = 120 if tiny else 400
+    iterations = 2 if tiny else 6
+    cfg = SolveConfig(solver="cobi", iterations=iterations, reads=8,
+                      int_range=14, steps=steps)
+    sizes = SIZES[:6] if tiny else SIZES
+    docs = [" ".join(synthetic_document(100 + i, n)) for i, n in enumerate(sizes)]
+    scenarios = (("loop", 0), ("farm4", 4)) if tiny else (
+        ("loop", 0), ("farm1", 1), ("farm4", 4), ("farm16", 16)
+    )
 
-    results = {}
-    for label, chips in (("loop", 0), ("farm1", 1), ("farm4", 4), ("farm16", 16)):
+    results: dict = {}
+    loop_rps = None
+    for label, chips in scenarios:
         engine = _engine(cfg, chips)
         _serve(engine, docs, seed=1)  # warmup: jit compiles
+        if chips:
+            b0 = engine.farm.stats()
         t0 = time.perf_counter()
         responses = _serve(engine, docs, seed=0)
         dt = time.perf_counter() - t0
         rps = len(docs) / dt
+        if not chips:
+            loop_rps = rps
         solver_s = sum(r.projected_solver_seconds for r in responses) / len(responses)
-        results[label] = rps
         derived = f"rps={rps:.2f};solver_s_per_req={solver_s:.6f}"
-        if chips and "loop" in results:
-            derived += f";speedup_vs_loop={rps / results['loop']:.2f}x"
+        if chips and loop_rps:
+            derived += f";speedup_vs_loop={rps / loop_rps:.2f}x"
         if chips:
             stats = engine.farm.stats()
-            derived += f";occupancy={stats.mean_occupancy:.2f}"
-        emit(f"farm_throughput_{label}_16req", dt / len(docs) * 1e6, derived)
+            bytes_per_req = (
+                stats.bytes_h2d - b0.bytes_h2d + stats.bytes_d2h - b0.bytes_d2h
+            ) / len(docs)
+            derived += (
+                f";occupancy={stats.mean_occupancy:.2f}"
+                f";bytes_per_req={bytes_per_req:.0f}"
+            )
+        _emit(results, f"farm_throughput_{label}_{len(docs)}req",
+              dt / len(docs) * 1e6, derived, rps=rps)
+
+    # Heavy-tailed mix straight against the farm: best-fit-decreasing packing
+    # + replica tiers, fused drains.  Each request contributes the engine's
+    # ``iterations`` stochastic-rounding anneal jobs, so one drain packs
+    # iterations x requests block-diagonal jobs.  Measures occupancy and
+    # wasted lane-executions.
+    heavy = list(zip(HEAVY_SIZES, HEAVY_READS))
+    if tiny:
+        heavy = heavy[:8]
+    from repro.data.synthetic import synthetic_benchmark
+    from repro.core.formulation import improved_ising
+    from repro.core.rounding import quantize_ising
+
+    jobs = []
+    for i, (n, reads) in enumerate(heavy):
+        p = synthetic_benchmark(200 + i, n, max(2, n // 4), lam=0.5)
+        inst = quantize_ising(
+            improved_ising(p), "deterministic", int_range=14
+        ).ising
+        check_programmable(inst)
+        jobs.extend((inst, reads) for _ in range(iterations))
+
+    def heavy_drain(seed):
+        farm = CobiFarm(4)
+        futs = [
+            farm.submit(inst, jax.random.fold_in(jax.random.key(seed), i),
+                        reads=reads, steps=steps, reduce="best")
+            for i, (inst, reads) in enumerate(jobs)
+        ]
+        farm.drain()
+        for f in futs:
+            f.result()
+        return farm
+
+    heavy_drain(0)  # warmup
+    t0 = time.perf_counter()
+    farm2 = heavy_drain(1)
+    dt = time.perf_counter() - t0
+    stats = farm2.stats()
+    # Lane-executions the chips spent vs. the minimum the jobs needed: a
+    # chip executes all its lanes for every read of its bin's tier, so both
+    # sparse packing AND oversized replica tiers show up here.
+    spent = (
+        sum(c.busy_seconds for c in stats.chips)
+        / farm2.hardware.seconds_per_solve * farm2.lanes_per_chip
+    )
+    needed = sum(inst.n * reads for inst, reads in jobs)
+    n_req = len(heavy)
+    _emit(
+        results, f"farm_throughput_heavy_{n_req}req", dt / n_req * 1e6,
+        f"rps={n_req / dt:.2f};occupancy={stats.mean_occupancy:.2f}"
+        f";bytes_per_req={(stats.bytes_h2d + stats.bytes_d2h) / n_req:.0f}"
+        f";lane_exec_overhead={spent / needed:.2f}x",
+        rps=n_req / dt, occupancy=stats.mean_occupancy,
+    )
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+    return results
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sizes/steps for CI smoke runs")
+    ap.add_argument("--json", default=None, help="dump metrics to this path")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(tiny=args.tiny, json_path=args.json)

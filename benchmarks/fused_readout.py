@@ -1,0 +1,75 @@
+"""Fused anneal→readout→best-of vs the two-kernel + host-argmin path.
+
+Times `ops.cobi_anneal(reduce="best")` (one launch, O(N) out) against the
+legacy `reduce="none"` chain (anneal launch -> phases -> spins -> separate
+energy launch -> all R reads to the host -> numpy argmin), solo and batched,
+and reports the device->host result bytes each path moves per anneal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_us
+
+
+def run() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    def instance(seed, n):
+        kh, kj = jax.random.split(jax.random.key(seed))
+        h = jax.random.randint(kh, (n,), -14, 15).astype(jnp.float32)
+        j = jax.random.randint(kj, (n, n), -14, 15).astype(jnp.float32)
+        j = jnp.triu(j, 1)
+        return h, j + j.T
+
+    n, r, steps = 59, 64, 200
+    h, j = instance(0, n)
+    key = jax.random.key(1)
+
+    def two_kernel():
+        spins, energies = ops.cobi_anneal(h, j, key, replicas=r, steps=steps)
+        e = np.asarray(energies)  # all R reads cross to the host
+        i = int(np.argmin(e))
+        return np.asarray(spins)[i], e[i]
+
+    def fused():
+        s, e = ops.cobi_anneal(h, j, key, replicas=r, steps=steps, reduce="best")
+        return np.asarray(s), float(e)  # O(N) out
+
+    us_two = time_us(two_kernel)
+    us_fused = time_us(fused)
+    bytes_two = r * n + r * 4  # int8 spins + f32 energies
+    bytes_fused = n + 4
+    emit(f"fused_readout_solo_n{n}_r{r}", us_fused,
+         f"two_kernel_us={us_two:.0f};speedup={us_two / us_fused:.2f}x"
+         f";result_bytes={bytes_fused}_vs_{bytes_two}")
+
+    b = 8
+    hs = jnp.stack([instance(i + 1, n)[0] for i in range(b)])
+    js = jnp.stack([instance(i + 1, n)[1] for i in range(b)])
+
+    def two_kernel_batch():
+        spins, energies = ops.cobi_anneal_batch(hs, js, key, replicas=r, steps=steps)
+        e = np.asarray(energies)
+        i = np.argmin(e, axis=1)
+        return np.asarray(spins)[np.arange(b), i], e[np.arange(b), i]
+
+    def fused_batch():
+        s, e = ops.cobi_anneal_batch(hs, js, key, replicas=r, steps=steps,
+                                     reduce="best")
+        return np.asarray(s), np.asarray(e)
+
+    us_two_b = time_us(two_kernel_batch)
+    us_fused_b = time_us(fused_batch)
+    emit(f"fused_readout_batch{b}_n{n}_r{r}", us_fused_b,
+         f"two_kernel_us={us_two_b:.0f};speedup={us_two_b / us_fused_b:.2f}x"
+         f";result_bytes={b * bytes_fused}_vs_{b * bytes_two}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -17,7 +17,9 @@ def main() -> None:
         fig23_iterations,
         fig5_decomposition,
         fig6_solvers,
+        fused_readout,
         kernel_bench,
+        repair_bench,
         roofline,
         supplementary,
         tts_ets,
@@ -33,6 +35,8 @@ def main() -> None:
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
         "farm": farm_throughput.run,
+        "fused_readout": fused_readout.run,
+        "repair": repair_bench.run,
     }
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

@@ -63,24 +63,44 @@ class SolveReport:
 
 
 def repair_selection(problem: EsProblem, x: np.ndarray) -> np.ndarray:
-    """Greedy add/remove to reach cardinality M (marginal-gain ordered)."""
+    """Greedy add/remove to reach cardinality M (marginal-gain ordered).
+
+    Marginal gains are maintained incrementally: each flip updates the whole
+    gain vector with ONE fused O(N) axpy on beta's (symmetric) row instead of
+    rebuilding mu - 2*lam*(beta @ x) and re-masking from scratch -- ~3x fewer
+    O(N) passes and zero per-flip allocations (see benchmarks/repair_bench.py;
+    ~4x at N=200).  The +-inf sentinels survive the updates (inf + finite ==
+    inf), so masked entries never need re-masking.
+    """
     x = np.asarray(x, np.int32).copy()
+    k = int(x.sum())
+    if k == problem.m:
+        return x
     mu = np.asarray(problem.mu, np.float64)
     beta = np.asarray(problem.beta, np.float64)
-    lam = problem.lam
-    red = beta @ x  # sum_{j in S} beta_ij  (beta has zero diagonal)
-    while int(x.sum()) > problem.m:
-        # Remove the selected sentence with the smallest marginal contribution
-        # (its removal gains 2*lam*red_i and loses mu_i).
-        contrib = np.where(x > 0, mu - 2.0 * lam * red, np.inf)
-        i = int(np.argmin(contrib))
-        x[i] = 0
-        red -= beta[:, i]
-    while int(x.sum()) < problem.m:
-        gain = np.where(x > 0, -np.inf, mu - 2.0 * lam * red)
-        i = int(np.argmax(gain))
-        x[i] = 1
-        red += beta[:, i]
+    lam2 = 2.0 * problem.lam
+    # score_i = mu_i - 2*lam*(beta x)_i: removing selected i loses score_i,
+    # adding unselected i gains score_i (beta has zero diagonal).
+    score = mu - lam2 * (beta @ x)
+    buf = np.empty_like(score)
+    if k > problem.m:
+        contrib = np.where(x > 0, score, np.inf)
+        while k > problem.m:
+            i = int(np.argmin(contrib))
+            x[i] = 0
+            k -= 1
+            np.multiply(beta[i], lam2, out=buf)  # symmetric: row i == col i
+            contrib += buf  # every remaining red_j drops by beta_ij
+            contrib[i] = np.inf
+    else:
+        gain = np.where(x > 0, -np.inf, score)
+        while k < problem.m:
+            i = int(np.argmax(gain))
+            x[i] = 1
+            k += 1
+            np.multiply(beta[i], lam2, out=buf)
+            gain -= buf  # every remaining red_j grows by beta_ij
+            gain[i] = -np.inf
     return x
 
 
@@ -225,7 +245,13 @@ def _solve_decomposed(problem: EsProblem, key: Array, cfg: SolveConfig) -> Solve
 def _iter_cobi_iterations(
     problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int
 ):
-    """Submit the instance's cfg.iterations anneal jobs, yield, reduce."""
+    """Submit the instance's cfg.iterations anneal jobs, yield, reduce.
+
+    Jobs go in with ``reduce="best"``: the per-iteration argmin-energy read is
+    the ONLY thing this reduce consumes, so the farm's fused epilogue keeps
+    replica spins/energies on device and each future resolves to just the
+    winner (bit-identical to all-reads + host argmin on integer instances).
+    """
     ising_fp = _build_ising(problem, cfg)
     check = cfg.int_range is not None or cfg.bits is not None
     keypairs = _iteration_keys(key, cfg.iterations)
@@ -240,7 +266,7 @@ def _iter_cobi_iterations(
         instances = [ising_fp] * cfg.iterations
     futures = [
         farm.submit(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
-                    priority=priority, check=check)
+                    priority=priority, check=check, reduce="best")
         for inst, (_, k_solve) in zip(instances, keypairs)
     ]
     yield futures

@@ -71,7 +71,11 @@ def synthetic_embeddings(
 
 
 def scores_from_embeddings(e: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Paper Eqs. (1)-(2): mu_i = cos(e_i, mean_doc); beta_ij = cos(e_i, e_j)."""
+    """Paper Eqs. (1)-(2): mu_i = cos(e_i, mean_doc); beta_ij = cos(e_i, e_j).
+
+    Deliberately NOT jit'd: sentence counts vary per request, so a jit cache
+    here would recompile (and grow) per distinct document length for ~8
+    dispatches of savings."""
     e = e / jnp.linalg.norm(e, axis=-1, keepdims=True)
     doc = jnp.mean(e, axis=0)
     doc = doc / jnp.maximum(jnp.linalg.norm(doc), 1e-9)

@@ -11,17 +11,23 @@ package turns the solver into a *farm*:
     pre-scaled by its own dynamics normalizer, so the packed trajectory
     advances every block exactly as a solo anneal would (the zero cross-blocks
     contribute exact float zeros to the matmuls), and per-block energies
-    unpack exactly.  First-fit packing in priority order keeps urgent jobs in
-    the earliest chip cycles.
+    unpack exactly.  Best-fit-decreasing packing in priority order keeps
+    urgent jobs in the earliest chip cycles while filling lanes densely, and
+    :func:`replica_tiers` keeps jobs with wildly different read counts out of
+    each other's bins (bounded wasted anneals).
 
   * :mod:`repro.farm.scheduler` -- :class:`CobiFarm` accepts solve jobs with
     priorities/deadlines and returns futures.  ``drain()`` groups jobs by
-    anneal schedule, packs them, pads the super-instance stack to a batch
-    bucket (shape-bucketing: jit recompiles scale with the bucket count, not
-    with request diversity), and runs ONE batched Pallas launch with grid
-    (instance, replica-block) -- the software picture of ``n_chips`` physical
-    COBI arrays each programmed once and executed R times.  Per-chip
-    occupancy plus the paper's 200 us / 25 mW per-execution model drive the
+    anneal schedule and replica tier, packs them, pads the super-instance
+    stack to a batch bucket (shape-bucketing: jit recompiles scale with the
+    bucket count, not with request diversity), and runs ONE batched Pallas
+    launch with grid (instance, replica-block) -- the software picture of
+    ``n_chips`` physical COBI arrays each programmed once and executed R
+    times.  ``reduce="best"`` jobs resolve through the fused
+    anneal→readout→best-of epilogue: each job's winning read is selected ON
+    DEVICE against the original coefficients, so a drain transfers O(lanes)
+    per super-instance instead of every replica's state.  Per-chip occupancy
+    plus the paper's 200 us / 25 mW per-execution model drive the
     latency/energy receipts each future carries.
 
 Hardware analogue: a rack of CMOS Ising chips behind a queue.  Packing many
@@ -31,10 +37,17 @@ busy; the farm reproduces that resource model in simulation while the TPU
 gets dense MXU tiles instead of zero padding.
 """
 
-from repro.farm.packing import PackedInstance, Slot, bucket_to, pack_instances  # noqa: F401
+from repro.farm.packing import (  # noqa: F401
+    PackedInstance,
+    Slot,
+    bucket_to,
+    pack_instances,
+    replica_tiers,
+)
 from repro.farm.scheduler import (  # noqa: F401
     BATCH_BUCKET,
     REPLICA_BUCKET,
+    REPLICA_TIER_RATIO,
     ChipStats,
     CobiFarm,
     FarmFuture,

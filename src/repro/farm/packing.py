@@ -11,12 +11,22 @@ energy of each block are exactly those of the instance solved alone:
     advances each block identically to a solo ``cobi_anneal`` (cross-block
     matmul contributions are exact float zeros);
   * **energy**    -- E(s_packed) = sum_k E_k(s_block_k), and per-block
-    energies are recovered exactly by re-scoring unpacked spins against the
-    original (h_k, J_k).
+    energies are recovered exactly by scoring against the UNSCALED
+    block-diagonal copy (``h_orig``/``j_orig``) that each bin also carries --
+    the fused readout epilogue keeps that copy VMEM-resident and reduces
+    per-slot best reads on device (kernels/cobi_dynamics.py).
 
-Packing is first-fit in scheduler priority order: the scheduler hands jobs
-over highest-priority first, so urgent jobs land in the earliest bins and
-therefore the earliest simulated chip cycles.
+Packing is best-fit in scheduler priority order: the scheduler hands jobs
+over highest-priority first (size-decreasing within a priority class, i.e.
+best-fit-decreasing), so urgent jobs land in the earliest bins and therefore
+the earliest simulated chip cycles, while each later job goes to the bin it
+fills tightest.
+
+Jobs with very different read counts should not share a bin at all -- a
+packed bin runs one replica count, so a 8-read job packed with a 256-read
+job would occupy its lanes for 248 wasted anneals.  :func:`replica_tiers`
+groups a drain's jobs into read-count tiers (max/min ratio bounded) that the
+scheduler packs independently.
 """
 
 from __future__ import annotations
@@ -53,6 +63,8 @@ class PackedInstance:
     capacity: int
     h_scaled: np.ndarray  # (capacity,) f32, pre-scaled per block
     j_scaled: np.ndarray  # (capacity, capacity) f32, block-diagonal
+    h_orig: np.ndarray  # (capacity,) f32, original coefficients per block
+    j_orig: np.ndarray  # (capacity, capacity) f32, block-diagonal, unscaled
     slots: List[Slot]
 
     @property
@@ -68,11 +80,13 @@ def pack_instances(
     jobs: Sequence[Tuple[int, IsingProblem]],
     capacity: int = LANE,
 ) -> List[PackedInstance]:
-    """First-fit pack ``(job_id, ising)`` pairs into block-diagonal bins.
+    """Best-fit pack ``(job_id, ising)`` pairs into block-diagonal bins.
 
     Jobs are taken in the given order (the scheduler pre-sorts by priority /
-    deadline); each goes into the first bin with enough free lanes, else a
-    new bin.  Raises if any instance alone exceeds ``capacity``.
+    deadline, size-decreasing within a class -> best-fit-decreasing); each
+    goes into the bin it leaves the FEWEST free lanes in (ties to the
+    earliest bin, keeping urgent work in early chip cycles), else a new bin.
+    Raises if any instance alone exceeds ``capacity``.
     """
     if capacity % LANE != 0:
         raise ValueError(f"capacity must be a multiple of {LANE}, got {capacity}")
@@ -84,15 +98,16 @@ def pack_instances(
             raise ValueError(f"instance with {n} spins exceeds chip capacity {capacity}")
         target = None
         for b, f in enumerate(free):
-            if f >= n:
-                target = b
-                break
+            if f >= n and (target is None or f < free[target]):
+                target = b  # best fit: tightest bin that still holds the job
         if target is None:
             bins.append(
                 PackedInstance(
                     capacity=capacity,
                     h_scaled=np.zeros(capacity, np.float32),
                     j_scaled=np.zeros((capacity, capacity), np.float32),
+                    h_orig=np.zeros(capacity, np.float32),
+                    j_orig=np.zeros((capacity, capacity), np.float32),
                     slots=[],
                 )
             )
@@ -108,6 +123,44 @@ def pack_instances(
         scale = float(np.maximum(denom, np.float32(1e-9)))
         inst.h_scaled[offset : offset + n] = h / np.float32(scale)
         inst.j_scaled[offset : offset + n, offset : offset + n] = j / np.float32(scale)
+        inst.h_orig[offset : offset + n] = h
+        inst.j_orig[offset : offset + n, offset : offset + n] = j
         inst.slots.append(Slot(job_id=job_id, offset=offset, n=n, scale=scale))
         free[target] -= n
     return bins
+
+
+def replica_tiers(
+    reads: Sequence[int],
+    *,
+    bucket: int = 8,
+    ratio: float = 2.0,
+) -> List[Tuple[int, List[int]]]:
+    """Group jobs into read-count tiers: ``[(tier_reads, indices), ...]``.
+
+    ``reads[i]`` is job i's read count.  Jobs are sorted by reads and greedily
+    tiered so that within a tier ``max_reads <= max(bucket, ratio * min_reads)``
+    -- similar read counts share a bin (and its single replica schedule, with
+    per-slot read budgets masking the surplus), while jobs with very
+    different read counts go to separate tiers instead of all running the
+    largest job's count.  A tier runs ``bucket_to(max reads in tier, bucket)``
+    anneals, so the wasted-anneal factor of any job is bounded by ``ratio``
+    (plus bucket rounding).  Tiers are returned smallest-reads first.
+    """
+    if ratio < 1.0:
+        raise ValueError(f"ratio must be >= 1, got {ratio}")
+    rs = [max(int(r), 1) for r in reads]  # non-positive reads run 1 anneal
+    order = sorted(range(len(rs)), key=lambda i: (rs[i], i))
+    tiers: List[Tuple[int, List[int]]] = []
+    cur: List[int] = []
+    cur_min = 0
+    for i in order:
+        if cur and rs[i] > max(bucket, ratio * cur_min):
+            tiers.append((bucket_to(max(rs[k] for k in cur), bucket), cur))
+            cur = []
+        if not cur:
+            cur_min = rs[i]
+        cur.append(i)
+    if cur:
+        tiers.append((bucket_to(max(rs[k] for k in cur), bucket), cur))
+    return tiers

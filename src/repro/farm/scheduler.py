@@ -5,26 +5,35 @@
 each) are submitted with a priority/deadline and return a :class:`FarmFuture`.
 ``drain()`` flushes the queue:
 
-  1. jobs are grouped by anneal schedule ``(replica bucket, steps, dt,
-     ks_max)`` -- packed instances share one trajectory, so the schedule must
-     match;
-  2. within a group, jobs are sorted (priority desc, deadline asc, FIFO) and
-     first-fit packed into block-diagonal super-instances
-     (:mod:`repro.farm.packing`);
+  1. jobs are grouped by anneal schedule ``(steps, dt, ks_max, reduce)`` --
+     packed instances share one trajectory, so the schedule must match --
+     and, within a schedule group, into read-count tiers
+     (:func:`repro.farm.packing.replica_tiers`): jobs with similar read
+     counts share a tier's replica schedule (per-slot read budgets mask the
+     surplus), jobs with very different read counts anneal in separate tiers
+     instead of all running the largest job's count;
+  2. within a tier, jobs are sorted (priority desc, deadline asc, size desc,
+     FIFO) and best-fit-decreasing packed into block-diagonal
+     super-instances (:mod:`repro.farm.packing`);
   3. the super-instance stack is padded to a batch bucket and annealed by ONE
-     batched Pallas launch (`ops.cobi_trajectory_batch`), grid = (instance,
-     replica-block), each chip's J resident in VMEM;
-  4. unpacked per-job spins are re-scored against the original (h, J) in ONE
-     batched energy launch (`ops.ising_energy` on (B, R, N) stacks) --
-     bit-identical to solo scoring;
-  5. futures resolve to :class:`repro.solvers.base.SolverResult` plus a
+     batched Pallas launch, grid = (instance, replica-block), each chip's J
+     resident in VMEM.  ``reduce="best"`` jobs take the fused
+     anneal→readout→best-of epilogue (`ops.cobi_anneal_packed_best`): spins
+     are signed, scored against the VMEM-resident ORIGINAL coefficients, and
+     reduced to each slot's best read on device, so only O(lanes) per
+     super-instance ever crosses HBM/PCIe.  ``reduce="none"`` jobs keep the
+     legacy two-launch path (full phases, separate batched energy scoring)
+     and return every read;
+  4. futures resolve to :class:`repro.solvers.base.SolverResult` plus a
      :class:`JobReceipt` carrying the paper's latency/energy accounting.
 
 Hardware-time model: each super-instance occupies one chip for
-``replicas * seconds_per_solve`` (R sequential 200 us executions of the
+``tier_reads * seconds_per_solve`` (sequential 200 us executions of the
 programmed array).  Bins are assigned round-robin to chips; a drain advances
 the simulated clock by the number of serialized cycles on the busiest chip.
 Job energy is the chip energy of its bin, attributed by lane share.
+Host↔device traffic of every launch is metered into ``FarmStats.bytes_h2d``
+/ ``bytes_d2h`` (the benchmark's bytes-per-request figure).
 """
 
 from __future__ import annotations
@@ -41,7 +50,7 @@ import numpy as np
 
 from repro.core.formulation import IsingProblem
 from repro.core.hardware import COBI, SolverHardware
-from repro.farm.packing import LANE, bucket_to, pack_instances
+from repro.farm.packing import LANE, bucket_to, pack_instances, replica_tiers
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.solvers.base import SolverResult
@@ -51,6 +60,8 @@ Array = jax.Array
 
 BATCH_BUCKET = 4  # super-instance batches are padded to a multiple of this
 REPLICA_BUCKET = 8  # read counts are padded to a multiple of this
+REPLICA_TIER_RATIO = 2.0  # max/min read ratio allowed to share a tier
+REDUCE_MODES = ("none", "best")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +76,7 @@ class FarmJob:
     priority: int
     deadline: Optional[float]
     submit_sim_time: float
+    reduce: str = "none"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +115,8 @@ class FarmStats:
     sim_seconds: float
     energy_joules: float
     chips: List[ChipStats]
+    bytes_h2d: int = 0  # host->device traffic of every drain launch
+    bytes_d2h: int = 0  # device->host result traffic
 
     @property
     def mean_occupancy(self) -> float:
@@ -165,6 +179,8 @@ class CobiFarm:
         self._sim_time = 0.0
         self._cycle = 0  # global chip-cycle counter
         self._drains = 0
+        self._bytes_h2d = 0
+        self._bytes_d2h = 0
         self._chips = [
             ChipStats(chip_id=c) for c in range(n_chips)
         ]
@@ -183,13 +199,21 @@ class CobiFarm:
         priority: int = 0,
         deadline: Optional[float] = None,
         check: Optional[bool] = None,
+        reduce: str = "none",
     ) -> FarmFuture:
-        """Queue one anneal job; rejects instances the chip cannot hold."""
+        """Queue one anneal job; rejects instances the chip cannot hold.
+
+        ``reduce="best"`` resolves the future to only the job's best read
+        (SolverResult with (1, N) spins / (1,) energy) through the fused
+        on-device epilogue; ``"none"`` returns every read.
+        """
         if ising.n > self.max_spins:
             raise ValueError(
                 f"COBI farm chips hold <= {self.max_spins} spins, got {ising.n}; "
                 "decompose first (core.decomposition)"
             )
+        if reduce not in REDUCE_MODES:
+            raise ValueError(f"reduce must be one of {REDUCE_MODES}, got {reduce!r}")
         do_check = self.check if check is None else check
         if do_check:
             check_programmable(ising, max_spins=self.max_spins)
@@ -204,6 +228,7 @@ class CobiFarm:
             priority=int(priority),
             deadline=deadline,
             submit_sim_time=self._sim_time,
+            reduce=reduce,
         )
         self._pending.append(job)
         self._jobs[job.job_id] = job
@@ -214,13 +239,18 @@ class CobiFarm:
         if not self._pending:
             return 0
         pending, self._pending = self._pending, []
-        groups: Dict[Tuple[int, int, float, float], List[FarmJob]] = {}
+        groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
         for job in pending:
-            gkey = (bucket_to(max(job.reads, 1), REPLICA_BUCKET), job.steps, job.dt,
-                    job.ks_max)
+            gkey = (job.steps, job.dt, job.ks_max, job.reduce)
             groups.setdefault(gkey, []).append(job)
         for gkey in sorted(groups):
-            self._run_group(gkey, groups[gkey])
+            jobs = groups[gkey]
+            tiers = replica_tiers(
+                [j.reads for j in jobs],
+                bucket=REPLICA_BUCKET, ratio=REPLICA_TIER_RATIO,
+            )
+            for tier_reads, idxs in tiers:
+                self._run_group(tier_reads, gkey, [jobs[i] for i in idxs])
         self._drains += 1
         return len(pending)
 
@@ -245,14 +275,18 @@ class CobiFarm:
             energy_joules=sum(c.busy_seconds for c in self._chips)
             * self.hardware.solver_power_w,
             chips=list(self._chips),
+            bytes_h2d=self._bytes_h2d,
+            bytes_d2h=self._bytes_d2h,
         )
 
     # ------------------------------------------------------------ internals
 
-    def _run_group(self, gkey: Tuple[int, int, float, float], jobs: List[FarmJob]):
-        r_bucket, steps, dt, ks_max = gkey
+    def _run_group(
+        self, r_tier: int, gkey: Tuple[int, float, float, str], jobs: List[FarmJob]
+    ):
+        steps, dt, ks_max, reduce = gkey
         # Priority/deadline first (urgent jobs reach the earliest chip
-        # cycles), then size-decreasing: first-fit-decreasing within a
+        # cycles), then size-decreasing: best-fit-decreasing within a
         # priority class packs the lanes measurably denser.
         order = sorted(
             jobs,
@@ -266,58 +300,128 @@ class CobiFarm:
         b_real = len(bins)
         b_pad = bucket_to(b_real, BATCH_BUCKET)
         L = self.lanes_per_chip
-        slots = [(b, slot) for b, inst in enumerate(bins) for slot in inst.slots]
+        slots = [(b, si, slot) for b, inst in enumerate(bins)
+                 for si, slot in enumerate(inst.slots)]
         hp = np.zeros((b_pad, L), np.float32)
         jp = np.zeros((b_pad, L, L), np.float32)
-        phi0 = np.zeros((b_pad, r_bucket, L), np.float32)
+        phi0 = np.zeros((b_pad, r_tier, L), np.float32)
         for b, inst in enumerate(bins):
             hp[b] = inst.h_scaled
             jp[b] = inst.j_scaled
         # Per-job phases from the job's own key -- results are reproducible
-        # regardless of which jobs share a bin -- drawn in ONE launch for the
-        # whole group (key count bucketed to keep the jit cache small).
-        keys = [by_id[slot.job_id].key for _, slot in slots]
-        k_pad = bucket_to(len(keys), REPLICA_BUCKET)
-        keys += [jax.random.key(0)] * (k_pad - len(keys))
-        draws = np.asarray(
-            _phi0_from_keys(jnp.stack(keys), r=r_bucket, lanes=L)
-        )
-        for idx, (b, slot) in enumerate(slots):
-            phi0[b, :, slot.offset : slot.offset + slot.n] = draws[idx, :, : slot.n]
+        # regardless of binmates or tier: each job draws at its OWN bucketed
+        # read count (rows past it are inert: zero-phase anneals excluded by
+        # the read budget / slicing).  One launch per distinct bucket (key
+        # count bucketed to keep the jit cache small).
+        by_rj: Dict[int, List[int]] = {}
+        for idx, (b, si, slot) in enumerate(slots):
+            rj = bucket_to(max(by_id[slot.job_id].reads, 1), REPLICA_BUCKET)
+            by_rj.setdefault(rj, []).append(idx)
+        for rj, idxs in sorted(by_rj.items()):
+            keys = [by_id[slots[i][2].job_id].key for i in idxs]
+            k_pad = bucket_to(len(keys), REPLICA_BUCKET)
+            keys += [jax.random.key(0)] * (k_pad - len(keys))
+            draws = np.asarray(_phi0_from_keys(jnp.stack(keys), r=rj, lanes=L))
+            for pos, i in enumerate(idxs):
+                b, _, slot = slots[i]
+                phi0[b, :rj, slot.offset : slot.offset + slot.n] = (
+                    draws[pos, :, : slot.n]
+                )
 
+        if reduce == "best":
+            self._execute_fused(bins, slots, by_id, hp, jp, phi0,
+                                steps=steps, dt=dt, ks_max=ks_max)
+        else:
+            self._execute_full(bins, slots, by_id, hp, jp, phi0,
+                               steps=steps, dt=dt, ks_max=ks_max)
+        self._account(bins, slots, by_id, r_tier)
+
+    def _execute_fused(self, bins, slots, by_id, hp, jp, phi0, *, steps, dt, ks_max):
+        """Fused drain: ONE launch; per-job winners come back, nothing else."""
+        b_pad, _, L = phi0.shape
+        s_pad = bucket_to(max(len(inst.slots) for inst in bins), ops.SLOT_PAD)
+        hu = np.zeros((b_pad, L), np.float32)
+        ju = np.zeros((b_pad, L, L), np.float32)
+        mask = np.zeros((b_pad, L, s_pad), np.float32)
+        reads = np.zeros((b_pad, s_pad), np.float32)
+        for b, inst in enumerate(bins):
+            hu[b] = inst.h_orig
+            ju[b] = inst.j_orig
+            for si, slot in enumerate(inst.slots):
+                mask[b, slot.offset : slot.offset + slot.n, si] = 1.0
+                reads[b, si] = max(by_id[slot.job_id].reads, 1)
+        self._bytes_h2d += (jp.nbytes + hp.nbytes + ju.nbytes + hu.nbytes
+                            + mask.nbytes + reads.nbytes + phi0.nbytes)
+        best_e, best_s = ops.cobi_anneal_packed_best(
+            jnp.asarray(jp), jnp.asarray(hp), jnp.asarray(ju), jnp.asarray(hu),
+            jnp.asarray(mask), jnp.asarray(reads), jnp.asarray(phi0),
+            steps=steps, dt=dt, ks_max=ks_max, impl=self.impl,
+        )
+        best_e = np.asarray(best_e)  # (B, S) f32
+        best_s = np.asarray(best_s)  # (B, S, L) int8
+        self._bytes_d2h += best_e.nbytes + best_s.nbytes
+        for b, si, slot in slots:
+            self._results[slot.job_id] = SolverResult(
+                spins=best_s[b, si : si + 1, slot.offset : slot.offset + slot.n].copy(),
+                energies=best_e[b, si : si + 1].copy(),
+            )
+
+    def _execute_full(self, bins, slots, by_id, hp, jp, phi0, *, steps, dt, ks_max):
+        """Legacy two-launch drain: full trajectories, separate re-scoring;
+        every read of every job comes back to the host."""
+        self._bytes_h2d += jp.nbytes + hp.nbytes + phi0.nbytes
         phi = ops.cobi_trajectory_batch(
             jnp.asarray(jp), jnp.asarray(hp), jnp.asarray(phi0),
             steps=steps, dt=dt, ks_max=ks_max, impl=self.impl,
         )
         spins_packed = np.asarray(kref.ref_cobi_spins(phi))  # (B, R, L) int8
+        self._bytes_d2h += spins_packed.nbytes
 
         # One batched energy launch scores every job against its ORIGINAL
         # (h, J); per-job spins sit at lane offset 0, exactly like the solo
         # ops.ising_energy padding path, so scores match solo bit-for-bit.
         n_jobs = len(slots)
+        r_tier = phi0.shape[1]
         # Pad scoring to the same lane multiple the solo ops.ising_energy
         # path would use for the group's largest job (usually one 128-lane
         # tile; more when the farm is configured for >128-spin chips).
-        score_n = bucket_to(max(max(s.n for _, s in slots), LANE), LANE)
-        s_stack = np.zeros((n_jobs, r_bucket, score_n), np.float32)
+        score_n = bucket_to(max(max(s.n for _, _, s in slots), LANE), LANE)
+        s_stack = np.zeros((n_jobs, r_tier, score_n), np.float32)
         h_stack = np.zeros((n_jobs, score_n), np.float32)
         j_stack = np.zeros((n_jobs, score_n, score_n), np.float32)
-        for k, (b, slot) in enumerate(slots):
+        for k, (b, _, slot) in enumerate(slots):
             job = by_id[slot.job_id]
             s_stack[k, :, : slot.n] = spins_packed[b, :, slot.offset : slot.offset + slot.n]
             h_stack[k, : slot.n] = np.asarray(job.ising.h, np.float32)
             j_stack[k, : slot.n, : slot.n] = np.asarray(job.ising.j, np.float32)
+        self._bytes_h2d += s_stack.nbytes + h_stack.nbytes + j_stack.nbytes
         energies = np.asarray(
             ops.ising_energy(
                 jnp.asarray(s_stack), jnp.asarray(h_stack), jnp.asarray(j_stack),
                 impl=self.impl,
             )
-        )  # (n_jobs, r_bucket)
+        )  # (n_jobs, r_tier)
+        self._bytes_d2h += energies.nbytes
 
-        # Simulated hardware accounting: bins round-robin over chips, each
-        # occupying its chip for r_bucket sequential executions.
+        for k, (b, _, slot) in enumerate(slots):
+            job = by_id[slot.job_id]
+            # Host arrays: the reduce that consumes these is numpy, and 100s
+            # of per-job device_puts were measurable at farm throughput.
+            # Copies, not views -- a view would pin the whole packed batch
+            # in memory for as long as the result is retained.
+            self._results[job.job_id] = SolverResult(
+                spins=spins_packed[
+                    b, : job.reads, slot.offset : slot.offset + slot.n
+                ].copy(),
+                energies=energies[k, : job.reads].copy(),
+            )
+
+    def _account(self, bins, slots, by_id, r_tier: int):
+        """Simulated hardware accounting: bins round-robin over chips, each
+        occupying its chip for the tier's sequential executions."""
         hw = self.hardware
-        bin_seconds = r_bucket * hw.seconds_per_solve
+        bin_seconds = r_tier * hw.seconds_per_solve
+        b_real = len(bins)
         cycles = math.ceil(b_real / self.n_chips)
         t0 = self._sim_time
         bin_completion = {}
@@ -333,20 +437,10 @@ class CobiFarm:
         self._sim_time = t0 + cycles * bin_seconds
         self._cycle += cycles
 
-        for k, (b, slot) in enumerate(slots):
+        for b, _, slot in slots:
             job = by_id[slot.job_id]
             inst = bins[b]
             share = slot.n / inst.lanes_used
-            # Host arrays: the reduce that consumes these is numpy, and 100s
-            # of per-job device_puts were measurable at farm throughput.
-            # Copies, not views -- a view would pin the whole packed batch
-            # in memory for as long as the result is retained.
-            self._results[job.job_id] = SolverResult(
-                spins=spins_packed[
-                    b, : job.reads, slot.offset : slot.offset + slot.n
-                ].copy(),
-                energies=energies[k, : job.reads].copy(),
-            )
             self._receipts[job.job_id] = JobReceipt(
                 job_id=job.job_id,
                 chip_id=b % self.n_chips,
@@ -377,11 +471,13 @@ def solve_many(
     ks_max: float = 1.2,
     impl: str = "auto",
     check: bool = True,
+    reduce: str = "none",
 ) -> List[SolverResult]:
     """One-shot convenience: pack + solve a list of instances on a fresh farm."""
     farm = CobiFarm(n_chips, impl=impl, check=check)
     futures = [
-        farm.submit(ising, key, reads=reads, steps=steps, dt=dt, ks_max=ks_max)
+        farm.submit(ising, key, reads=reads, steps=steps, dt=dt, ks_max=ks_max,
+                    reduce=reduce)
         for ising, key in zip(instances, keys)
     ]
     farm.drain()

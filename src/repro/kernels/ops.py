@@ -21,10 +21,15 @@ import numpy as np
 from repro.kernels import ref as kref
 from repro.kernels.cobi_dynamics import (
     LANE,
+    cobi_fused_best_batched_pallas,
+    cobi_fused_best_pallas,
+    cobi_readout_pallas,
     cobi_trajectory_batched_pallas,
     cobi_trajectory_pallas,
 )
 from repro.kernels.ising_energy import ising_energy_batched_pallas, ising_energy_pallas
+
+SLOT_PAD = 8  # slot axis of the fused readout is padded to this multiple
 
 Array = jax.Array
 
@@ -44,7 +49,11 @@ def dynamics_scale(h: Array, j: Array) -> Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("replicas", "steps", "dt", "ks_max", "impl", "replica_block")
+    jax.jit,
+    static_argnames=(
+        "replicas", "steps", "dt", "ks_max", "impl", "replica_block",
+        "reduce", "topk", "prescaled",
+    ),
 )
 def cobi_anneal(
     h: Array,
@@ -57,16 +66,37 @@ def cobi_anneal(
     ks_max: float = 1.0,
     impl: str = "auto",
     replica_block: int = 256,
+    reduce: str = "none",
+    topk: int | None = None,
+    prescaled: bool = False,
 ) -> Tuple[Array, Array]:
     """Anneal ``replicas`` independent oscillator networks.
 
-    Returns (spins (R, N) int8 in {-1,+1}, energies (R,) f32 of the *given*
-    integer/FP problem).  Deterministic given ``key``.
+    ``reduce`` selects the readout epilogue (all score against the *given*
+    integer/FP problem; deterministic given ``key``):
+
+      * ``"none"`` -- (spins (R, N) int8, energies (R,)): the legacy
+        two-kernel path (anneal, then a separate energy launch);
+      * ``"best"`` -- (spins (N,) int8, energy () f32): ONE fused launch;
+        phases/replica spins never leave the device.  Bit-identical to
+        ``"none"`` + host ``np.argmin`` on integer instances;
+      * ``"topk"`` -- (spins (k, N) int8, energies (k,) ascending): fused
+        anneal+score launch, device-side sort, only k rows transferred.
+        ``topk=None`` means k = replicas (all reads, sorted).
+
+    ``prescaled=True`` skips the per-instance dynamics normalization -- the
+    fast path for callers that already divided (h, j) by
+    :func:`dynamics_scale`, matching ``cobi_anneal_batch(prescaled=True)``.
+    Energies are still scored against the (h, j) actually passed in.
     """
     n = h.shape[-1]
-    scale = dynamics_scale(h, j)
-    j_s = jnp.asarray(j, jnp.float32) / scale
-    h_s = jnp.asarray(h, jnp.float32) / scale
+    if prescaled:
+        j_s = jnp.asarray(j, jnp.float32)
+        h_s = jnp.asarray(h, jnp.float32)
+    else:
+        scale = dynamics_scale(h, j)
+        j_s = jnp.asarray(j, jnp.float32) / scale
+        h_s = jnp.asarray(h, jnp.float32) / scale
 
     n_pad = _pad_to(max(n, LANE), LANE)
     r_block = min(replica_block, _pad_to(replicas, 8))
@@ -76,17 +106,63 @@ def cobi_anneal(
     jp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(j_s)
     hp = jnp.zeros((1, n_pad), jnp.float32).at[0, :n].set(h_s)
 
-    if impl == "ref":
-        phi = kref.ref_cobi_trajectory(jp, hp[0], phi0, steps=steps, dt=dt, ks_max=ks_max)
-    else:
-        interpret = _on_cpu()
-        phi = cobi_trajectory_pallas(
-            jp, hp, phi0, steps=steps, dt=dt, ks_max=ks_max,
-            replica_block=r_block, interpret=interpret,
-        )
-    spins = kref.ref_cobi_spins(phi[:replicas, :n])
-    energies = ising_energy(spins, h, j, impl=impl)
-    return spins, energies
+    if reduce == "none":
+        if impl == "ref":
+            phi = kref.ref_cobi_trajectory(
+                jp, hp[0], phi0, steps=steps, dt=dt, ks_max=ks_max
+            )
+        else:
+            phi = cobi_trajectory_pallas(
+                jp, hp, phi0, steps=steps, dt=dt, ks_max=ks_max,
+                replica_block=r_block, interpret=_on_cpu(),
+            )
+        spins = kref.ref_cobi_spins(phi[:replicas, :n])
+        energies = ising_energy(spins, h, j, impl=impl)
+        return spins, energies
+
+    # Fused epilogue paths score inside the anneal launch against the
+    # original (unscaled, unpadded-lanes-zero) coefficients.
+    ju = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(jnp.asarray(j, jnp.float32))
+    hu = jnp.zeros((1, n_pad), jnp.float32).at[0, :n].set(jnp.asarray(h, jnp.float32))
+
+    if reduce == "best":
+        mask = jnp.zeros((n_pad, SLOT_PAD), jnp.float32).at[:, 0].set(1.0)
+        reads = jnp.zeros((1, SLOT_PAD), jnp.float32).at[0, 0].set(float(replicas))
+        if impl == "ref":
+            phi = kref.ref_cobi_trajectory(
+                jp, hp[0], phi0, steps=steps, dt=dt, ks_max=ks_max
+            )
+            best_e, best_s = kref.ref_cobi_fused_best(
+                phi[None], ju[None], hu, mask[None], reads
+            )
+            best_e, best_s = best_e[0], best_s[0]
+        else:
+            e_out, s_out = cobi_fused_best_pallas(
+                jp, hp, ju, hu, mask, reads, phi0,
+                steps=steps, dt=dt, ks_max=ks_max,
+                replica_block=r_block, interpret=_on_cpu(),
+            )
+            best_e, best_s = e_out[:, 0], s_out
+        return best_s[0, :n].astype(jnp.int8), best_e[0]
+
+    if reduce == "topk":
+        k = replicas if topk is None else min(int(topk), replicas)
+        if impl == "ref":
+            phi = kref.ref_cobi_trajectory(
+                jp, hp[0], phi0, steps=steps, dt=dt, ks_max=ks_max
+            )
+            s_out = jnp.where(jnp.cos(phi) >= 0.0, 1.0, -1.0)
+            e_out = kref.ref_ising_energy(s_out, hu[0], ju)[:, None]
+        else:
+            s_out, e_out = cobi_readout_pallas(
+                jp, hp, ju, hu, phi0, steps=steps, dt=dt, ks_max=ks_max,
+                replica_block=r_block, interpret=_on_cpu(),
+            )
+        energies = e_out[:replicas, 0]
+        order = jnp.argsort(energies)[:k]  # stable: ties keep replica order
+        return s_out[order][:, :n].astype(jnp.int8), energies[order]
+
+    raise ValueError(f"unknown reduce mode {reduce!r}")
 
 
 @functools.partial(
@@ -138,7 +214,8 @@ def cobi_trajectory_batch(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "replicas", "steps", "dt", "ks_max", "impl", "replica_block", "prescaled"
+        "replicas", "steps", "dt", "ks_max", "impl", "replica_block", "prescaled",
+        "reduce",
     ),
 )
 def cobi_anneal_batch(
@@ -153,11 +230,15 @@ def cobi_anneal_batch(
     impl: str = "auto",
     replica_block: int = 256,
     prescaled: bool = False,
+    reduce: str = "none",
 ) -> Tuple[Array, Array]:
     """Batched :func:`cobi_anneal` over a stack of B instances.
 
-    Returns (spins (B, R, N) int8 in {-1,+1}, energies (B, R) f32 of the
-    *given* problems).  ``prescaled=True`` skips the per-instance dynamics
+    ``reduce="none"`` returns (spins (B, R, N) int8 in {-1,+1}, energies
+    (B, R) f32 of the *given* problems); ``reduce="best"`` fuses the readout
+    into the anneal launch and returns only each instance's winner: (spins
+    (B, N) int8, energies (B,) f32) -- bit-identical to ``"none"`` + argmin
+    on integer instances.  ``prescaled=True`` skips the per-instance dynamics
     normalization (the farm packer applies it per block before packing).
     """
     b, n = h.shape
@@ -169,6 +250,17 @@ def cobi_anneal_batch(
         j_s = jnp.asarray(j, jnp.float32) / scale[:, None, None]
         h_s = jnp.asarray(h, jnp.float32) / scale[:, None]
     phi0 = jax.random.uniform(key, (b, replicas, n), jnp.float32, 0.0, 2.0 * jnp.pi)
+    if reduce == "best":
+        mask = jnp.zeros((b, n, 1), jnp.float32).at[..., 0].set(1.0)
+        reads = jnp.full((b, 1), float(replicas), jnp.float32)
+        best_e, best_s = cobi_anneal_packed_best(
+            j_s, h_s, jnp.asarray(j, jnp.float32), jnp.asarray(h, jnp.float32),
+            mask, reads, phi0, steps=steps, dt=dt, ks_max=ks_max,
+            impl=impl, replica_block=replica_block,
+        )
+        return best_s[:, 0, :n], best_e[:, 0]
+    if reduce != "none":
+        raise ValueError(f"unknown reduce mode {reduce!r}")
     phi = cobi_trajectory_batch(
         j_s, h_s, phi0, steps=steps, dt=dt, ks_max=ks_max,
         impl=impl, replica_block=replica_block,
@@ -176,6 +268,73 @@ def cobi_anneal_batch(
     spins = kref.ref_cobi_spins(phi)
     energies = ising_energy(spins, h, j, impl=impl)
     return spins, energies
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "dt", "ks_max", "impl", "replica_block")
+)
+def cobi_anneal_packed_best(
+    j_scaled: Array,  # (B, N, N) pre-scaled dynamics couplings (packs welcome)
+    h_scaled: Array,  # (B, N)
+    j_orig: Array,  # (B, N, N) original scoring couplings (block-diagonal)
+    h_orig: Array,  # (B, N)
+    mask: Array,  # (B, N, S) 0/1 lane->slot assignment
+    reads: Array,  # (B, S) valid-read count per slot (0 = padding slot)
+    phi0: Array,  # (B, R, N) initial phases
+    *,
+    steps: int,
+    dt: float,
+    ks_max: float,
+    impl: str = "auto",
+    replica_block: int = 256,
+) -> Tuple[Array, Array]:
+    """Fused anneal→readout→best-of over B (possibly packed) instances.
+
+    The farm hot path: one launch returns (best energies (B, S) f32, best
+    spins (B, S, N) int8) -- each slot's first-argmin read scored against the
+    ORIGINAL coefficients, with replicas past the slot's read budget ignored.
+    Padding slots (``reads == 0``) come back as +inf / garbage; callers index
+    only real slots.  Replica spins and phases never leave the device.
+    """
+    b, r, n = phi0.shape
+    s_slots = mask.shape[-1]
+    n_pad = _pad_to(max(n, LANE), LANE)
+    s_pad = _pad_to(max(s_slots, SLOT_PAD), SLOT_PAD)
+    r_block = min(replica_block, _pad_to(r, 8))
+    r_pad = _pad_to(r, r_block)
+    jp = jnp.zeros((b, n_pad, n_pad), jnp.float32).at[:, :n, :n].set(
+        jnp.asarray(j_scaled, jnp.float32)
+    )
+    hp = jnp.zeros((b, 1, n_pad), jnp.float32).at[:, 0, :n].set(
+        jnp.asarray(h_scaled, jnp.float32)
+    )
+    jup = jnp.zeros((b, n_pad, n_pad), jnp.float32).at[:, :n, :n].set(
+        jnp.asarray(j_orig, jnp.float32)
+    )
+    hup = jnp.zeros((b, 1, n_pad), jnp.float32).at[:, 0, :n].set(
+        jnp.asarray(h_orig, jnp.float32)
+    )
+    mp = jnp.zeros((b, n_pad, s_pad), jnp.float32).at[:, :n, :s_slots].set(
+        jnp.asarray(mask, jnp.float32)
+    )
+    rp = jnp.zeros((b, 1, s_pad), jnp.float32).at[:, 0, :s_slots].set(
+        jnp.asarray(reads, jnp.float32)
+    )
+    pp = jnp.zeros((b, r_pad, n_pad), jnp.float32).at[:, :r, :n].set(
+        jnp.asarray(phi0, jnp.float32)
+    )
+    if impl == "ref":
+        phi = kref.ref_cobi_trajectory_batched(
+            jp, hp[:, 0], pp, steps=steps, dt=dt, ks_max=ks_max
+        )
+        best_e, best_s = kref.ref_cobi_fused_best(phi, jup, hup[:, 0], mp, rp[:, 0])
+    else:
+        e_out, s_out = cobi_fused_best_batched_pallas(
+            jp, hp, jup, hup, mp, rp, pp, steps=steps, dt=dt, ks_max=ks_max,
+            replica_block=r_block, interpret=_on_cpu(),
+        )
+        best_e, best_s = e_out[:, :, 0], s_out
+    return best_e[:, :s_slots], best_s[:, :s_slots, :n].astype(jnp.int8)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "replica_block"))

@@ -36,18 +36,25 @@ def ref_cobi_trajectory(
     This is gradient descent on the phase relaxation of
     H = h.s + s^T J s  (s_i = cos phi_i), plus a ramped sub-harmonic
     injection-locking (SHIL) term that binarizes phases to {0, pi}.
+
+    Op sequence matches the Pallas kernels' _anneal_loop exactly: the two J
+    products are one stacked [cos; sin] @ (2 J) contraction (row-independent,
+    and power-of-two scaling is FP-exact) and the SHIL term is the identity
+    sin(2 phi) = 2 sin phi cos phi, so only 2 trig + 1 matmul per step.
     """
     j_scaled = j_scaled.astype(jnp.float32)
     h_scaled = h_scaled.astype(jnp.float32).reshape(1, -1)
+    j2 = j_scaled + j_scaled  # exact: *2 only bumps exponents
+    r = phi0.shape[0]
 
     def step(t, phi):
         s = jnp.sin(phi)
         c = jnp.cos(phi)
-        jc = c @ j_scaled  # (R, N); J symmetric
-        js = s @ j_scaled
-        grad = 2.0 * (s * jc - c * js) + h_scaled * s
+        m = jnp.concatenate([c, s], axis=0)  # (2R, N); J symmetric
+        mj = m @ j2
+        grad = (s * mj[:r] - c * mj[r:]) + h_scaled * s
         ks = ks_max * (t.astype(jnp.float32) + 1.0) / steps
-        return phi + dt * (grad - ks * jnp.sin(2.0 * phi))
+        return phi + dt * (grad - ks * (2.0 * (s * c)))
 
     return jax.lax.fori_loop(0, steps, step, phi0.astype(jnp.float32))
 
@@ -69,6 +76,35 @@ def ref_cobi_trajectory_batched(
     """vmap of :func:`ref_cobi_trajectory` over a stack of B instances."""
     traj = lambda j, h, p: ref_cobi_trajectory(j, h, p, steps=steps, dt=dt, ks_max=ks_max)
     return jax.vmap(traj)(j_scaled, h_scaled, phi0)
+
+
+def ref_cobi_fused_best(
+    phi: Array,  # (B, R, N) final phases
+    j_orig: Array,  # (B, N, N) scoring couplings (original, unscaled)
+    h_orig: Array,  # (B, N)
+    mask: Array,  # (B, N, S) 0/1 lane->slot assignment
+    reads: Array,  # (B, S) valid-read count per slot
+) -> tuple[Array, Array]:
+    """Oracle for the fused readout epilogue (kernels/cobi_dynamics.py).
+
+    Signs phases into spins, scores per-lane energy densities against the
+    original coefficients, folds them into per-slot energies through the lane
+    mask, masks replicas past each slot's read budget to +inf, and keeps the
+    FIRST replica attaining each slot's minimum (host ``np.argmin`` ties).
+    Returns (best_energies (B, S) f32, best_spins (B, S, N) f32 in {-1,+1}).
+    """
+    s = jnp.where(jnp.cos(phi) >= 0.0, 1.0, -1.0).astype(jnp.float32)
+    sj = jnp.einsum("brn,bnm->brm", s, j_orig.astype(jnp.float32))
+    e_lanes = s * sj + h_orig.astype(jnp.float32)[:, None, :] * s
+    e_slots = jnp.einsum("brn,bns->brs", e_lanes, mask.astype(jnp.float32))
+    r = phi.shape[1]
+    rep = jnp.arange(r, dtype=jnp.float32)[None, :, None]
+    e_slots = jnp.where(rep < reads.astype(jnp.float32)[:, None, :], e_slots, jnp.inf)
+    best_e = jnp.min(e_slots, axis=1)  # (B, S)
+    hit = e_slots == best_e[:, None, :]
+    first = jnp.min(jnp.where(hit, rep, jnp.float32(r)), axis=1).astype(jnp.int32)
+    best_s = jax.vmap(lambda sb, fb: sb[fb])(s, first)  # (B, S, N)
+    return best_e, best_s
 
 
 # ---------------------------------------------------------------------------

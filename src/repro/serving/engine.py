@@ -10,9 +10,12 @@ iterations of the current decomposition window) to a shared
 :class:`repro.farm.CobiFarm` and yields; the engine drives all requests in
 lockstep, draining the farm ONCE per round so jobs from different requests
 are packed onto the same virtual chips and annealed by one batched Pallas
-launch.  Per-request latency/energy come from the farm's job receipts (the
-paper's 200 us / 25 mW hardware model); non-COBI solvers keep the
-per-invocation hardware model."""
+launch.  Jobs go in with ``reduce="best"``: the fused
+anneal→readout→best-of epilogue selects each iteration's winning read ON
+DEVICE, so a drain ships O(lanes) per super-instance back to the engine
+instead of every replica's spins.  Per-request latency/energy come from the
+farm's job receipts (the paper's 200 us / 25 mW hardware model); non-COBI
+solvers keep the per-invocation hardware model."""
 
 from __future__ import annotations
 

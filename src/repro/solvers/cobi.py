@@ -45,11 +45,17 @@ def solve(
     ks_max: float = 1.2,
     impl: str = "auto",
     check: bool = True,
+    reduce: str = "none",
 ) -> SolverResult:
-    """Run ``reads`` independent anneals; returns all reads (caller keeps best)."""
+    """Run ``reads`` independent anneals.
+
+    ``reduce="none"`` returns all reads (caller keeps best); ``"best"``
+    returns only the argmin-energy read via the fused on-device epilogue
+    (spins (1, N), energies (1,)); ``"topk"`` the k best reads ascending.
+    """
     if check:
         check_programmable(ising)
-    spins, energies = ops.cobi_anneal(
+    out = ops.cobi_anneal(
         jnp.asarray(ising.h, jnp.float32),
         jnp.asarray(ising.j, jnp.float32),
         key,
@@ -58,7 +64,11 @@ def solve(
         dt=dt,
         ks_max=ks_max,
         impl=impl,
+        reduce=reduce,
     )
+    spins, energies = out
+    if reduce == "best":
+        spins, energies = spins[None], energies[None]
     return SolverResult(spins=spins, energies=energies)
 
 
@@ -73,6 +83,7 @@ def solve_batch(
     ks_max: float = 1.2,
     impl: str = "auto",
     check: bool = True,
+    reduce: str = "none",
 ) -> "list[SolverResult]":
     """Solve many instances at once on a virtual chip farm.
 
@@ -86,5 +97,5 @@ def solve_batch(
 
     return solve_many(
         instances, keys, n_chips=n_chips, reads=reads, steps=steps,
-        dt=dt, ks_max=ks_max, impl=impl, check=check,
+        dt=dt, ks_max=ks_max, impl=impl, check=check, reduce=reduce,
     )

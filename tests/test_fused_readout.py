@@ -1,0 +1,347 @@
+"""Fused anneal→readout→best-of epilogue: bit-parity against the two-kernel
+(anneal → ising_energy → host argmin) path on integer instances, for solo,
+packed (block-diagonal), and ragged-tier batches; topk prefix property;
+best-fit / replica-tier packing invariants; prescaled fast path; vectorized
+repair equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formulation import IsingProblem
+from repro.farm import CobiFarm, pack_instances, replica_tiers
+from repro.kernels import ops
+from repro.solvers import cobi as cobi_solver
+
+
+def _instance(seed, n):
+    kh, kj = jax.random.split(jax.random.key(seed))
+    h = jax.random.randint(kh, (n,), -14, 15).astype(jnp.float32)
+    j = jax.random.randint(kj, (n, n), -14, 15).astype(jnp.float32)
+    j = jnp.triu(j, 1)
+    return IsingProblem(h=h, j=j + j.T)
+
+
+def _first_argmin(energies):
+    return int(np.argmin(np.asarray(energies)))
+
+
+# ------------------------------------------------------------- solo parity
+
+
+@pytest.mark.parametrize("n,r", [(16, 8), (59, 10), (40, 24), (128, 16)])
+def test_solo_fused_best_matches_two_kernel_argmin(n, r):
+    """reduce='best' == reduce='none' + host argmin, bit for bit."""
+    p = _instance(n * 31 + r, n)
+    key = jax.random.key(n + r)
+    spins, energies = ops.cobi_anneal(p.h, p.j, key, replicas=r, steps=80)
+    i = _first_argmin(energies)
+    best_s, best_e = ops.cobi_anneal(p.h, p.j, key, replicas=r, steps=80,
+                                     reduce="best")
+    assert best_s.shape == (n,) and best_s.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(best_s), np.asarray(spins)[i])
+    assert float(best_e) == float(np.asarray(energies)[i])
+
+
+def test_solo_fused_best_ref_impl_matches_its_two_kernel_path():
+    p = _instance(4, 33)
+    key = jax.random.key(3)
+    spins, energies = ops.cobi_anneal(p.h, p.j, key, replicas=12, steps=80,
+                                      impl="ref")
+    i = _first_argmin(energies)
+    best_s, best_e = ops.cobi_anneal(p.h, p.j, key, replicas=12, steps=80,
+                                     impl="ref", reduce="best")
+    np.testing.assert_array_equal(np.asarray(best_s), np.asarray(spins)[i])
+    assert float(best_e) == float(np.asarray(energies)[i])
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_topk_energies_are_prefix_of_sorted_full_readout(k):
+    """Property: reduce='topk' energies == sorted(reduce='none' energies)[:k]
+    bitwise, and the returned spins re-score to exactly those energies."""
+    p = _instance(9, 45)
+    key = jax.random.key(17)
+    _, energies = ops.cobi_anneal(p.h, p.j, key, replicas=8, steps=80)
+    top_s, top_e = ops.cobi_anneal(p.h, p.j, key, replicas=8, steps=80,
+                                   reduce="topk", topk=k)
+    assert top_s.shape == (k, p.n) and top_e.shape == (k,)
+    np.testing.assert_array_equal(
+        np.asarray(top_e), np.sort(np.asarray(energies))[:k]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.ising_energy(top_s, p.h, p.j)), np.asarray(top_e)
+    )
+    assert np.all(np.diff(np.asarray(top_e)) >= 0)  # ascending
+
+
+def test_batched_fused_best_matches_per_instance_argmin():
+    key = jax.random.key(21)
+    B, N, R = 4, 26, 8
+    kh, kj = jax.random.split(key)
+    h = jax.random.randint(kh, (B, N), -14, 15).astype(jnp.float32)
+    j = jax.random.randint(kj, (B, N, N), -14, 15).astype(jnp.float32)
+    j = jnp.triu(j, 1)
+    j = j + jnp.swapaxes(j, 1, 2)
+    spins, energies = ops.cobi_anneal_batch(h, j, key, replicas=R, steps=80)
+    best_s, best_e = ops.cobi_anneal_batch(h, j, key, replicas=R, steps=80,
+                                           reduce="best")
+    assert best_s.shape == (B, N) and best_e.shape == (B,)
+    for b in range(B):
+        i = _first_argmin(energies[b])
+        np.testing.assert_array_equal(np.asarray(best_s[b]), np.asarray(spins[b, i]))
+        assert float(best_e[b]) == float(np.asarray(energies[b, i]))
+
+
+def test_solver_reduce_best_solver_result():
+    p = _instance(2, 24)
+    res_all = cobi_solver.solve(p, jax.random.key(0), reads=8, steps=80)
+    res_best = cobi_solver.solve(p, jax.random.key(0), reads=8, steps=80,
+                                 reduce="best")
+    assert res_best.spins.shape == (1, p.n) and res_best.energies.shape == (1,)
+    i = _first_argmin(res_all.energies)
+    np.testing.assert_array_equal(
+        np.asarray(res_best.spins)[0], np.asarray(res_all.spins)[i]
+    )
+
+
+# ----------------------------------------------------- packed farm parity
+
+
+def test_packed_fused_best_matches_legacy_farm_argmin():
+    """Packed (block-diagonal) bins: every job's fused winner equals the
+    legacy all-reads drain + host argmin, bit for bit."""
+    sizes = [59, 40, 20, 12, 59, 33, 25]
+    probs = [_instance(i, n) for i, n in enumerate(sizes)]
+    keys = [jax.random.fold_in(jax.random.key(0), i) for i in range(len(probs))]
+
+    farm_none = CobiFarm(2)
+    futs_n = [farm_none.submit(p, k, reads=8, steps=100)
+              for p, k in zip(probs, keys)]
+    farm_none.drain()
+    farm_best = CobiFarm(2)
+    futs_b = [farm_best.submit(p, k, reads=8, steps=100, reduce="best")
+              for p, k in zip(probs, keys)]
+    farm_best.drain()
+
+    for i, (fn, fb) in enumerate(zip(futs_n, futs_b)):
+        rn, rb = fn.result(), fb.result()
+        a = _first_argmin(rn.energies)
+        assert rb.spins.shape == (1, probs[i].n)
+        np.testing.assert_array_equal(
+            np.asarray(rb.spins)[0], np.asarray(rn.spins)[a], err_msg=str(i)
+        )
+        assert float(rb.energies[0]) == float(np.asarray(rn.energies)[a])
+        # fused winner re-scores to its reported energy against the original
+        solo = np.asarray(ops.ising_energy(rb.spins, probs[i].h, probs[i].j))
+        np.testing.assert_array_equal(solo, np.asarray(rb.energies))
+
+
+def test_ragged_tier_fused_best_matches_legacy():
+    """Jobs with very different read counts (separate replica tiers) and
+    ragged within-tier read counts still reduce bit-identically."""
+    sizes_reads = [(40, 6), (59, 8), (20, 12), (30, 64), (12, 60), (25, 8)]
+    probs = [_instance(100 + i, n) for i, (n, _) in enumerate(sizes_reads)]
+    keys = [jax.random.fold_in(jax.random.key(5), i) for i in range(len(probs))]
+
+    results = {}
+    for mode in ("none", "best"):
+        farm = CobiFarm(2)
+        futs = [farm.submit(p, k, reads=r, steps=90, reduce=mode)
+                for p, k, (_, r) in zip(probs, keys, sizes_reads)]
+        farm.drain()
+        results[mode] = [f.result() for f in futs]
+        # two tiers ran: reads {6,8,8,12} and {60,64}
+        assert farm.stats().super_instances >= 2
+
+    for i, ((_, r), rn, rb) in enumerate(
+        zip(sizes_reads, results["none"], results["best"])
+    ):
+        assert rn.energies.shape == (r,)  # legacy keeps every read
+        a = _first_argmin(rn.energies)
+        np.testing.assert_array_equal(
+            np.asarray(rb.spins)[0], np.asarray(rn.spins)[a], err_msg=str(i)
+        )
+        assert float(rb.energies[0]) == float(np.asarray(rn.energies)[a])
+
+
+def test_fused_job_independent_of_binmates_and_tier():
+    """Same job + key -> identical winner whether solo, packed with binmates,
+    or sharing a drain with a different replica tier."""
+    p = _instance(55, 41)
+    key = jax.random.key(11)
+
+    farm_solo = CobiFarm(1)
+    fut_solo = farm_solo.submit(p, key, reads=8, steps=100, reduce="best")
+    farm_solo.drain()
+
+    farm_mixed = CobiFarm(1)
+    farm_mixed.submit(_instance(56, 59), jax.random.key(99), reads=8, steps=100,
+                      reduce="best")
+    fut_mixed = farm_mixed.submit(p, key, reads=8, steps=100, reduce="best")
+    farm_mixed.submit(_instance(57, 20), jax.random.key(98), reads=64, steps=100,
+                      reduce="best")  # different tier in the same drain
+    farm_mixed.drain()
+
+    np.testing.assert_array_equal(
+        np.asarray(fut_solo.result().spins), np.asarray(fut_mixed.result().spins)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fut_solo.result().energies),
+        np.asarray(fut_mixed.result().energies),
+    )
+
+
+def test_farm_rejects_unknown_reduce():
+    farm = CobiFarm(1)
+    with pytest.raises(ValueError, match="reduce"):
+        farm.submit(_instance(0, 10), jax.random.key(0), reduce="topk")
+
+
+def test_fused_drain_moves_fewer_result_bytes():
+    probs = [_instance(i, 30) for i in range(6)]
+    keys = [jax.random.fold_in(jax.random.key(2), i) for i in range(6)]
+    stats = {}
+    for mode in ("none", "best"):
+        farm = CobiFarm(2)
+        for p, k in zip(probs, keys):
+            farm.submit(p, k, reads=8, steps=60, reduce=mode)
+        farm.drain()
+        stats[mode] = farm.stats()
+    assert stats["best"].bytes_d2h < stats["none"].bytes_d2h
+    assert stats["none"].bytes_h2d > 0 and stats["best"].bytes_h2d > 0
+
+
+# ------------------------------------------------- packing / replica tiers
+
+
+def test_best_fit_prefers_tightest_bin():
+    """59 opens bin0 (69 free), 70 opens bin1 (58 free); a 50 fits both but
+    must land in bin1 (tighter), leaving bin0's 69 lanes for the next 60."""
+    sizes = [59, 70, 50, 60]
+    bins = pack_instances(
+        [(i, _instance(i, n)) for i, n in enumerate(sizes)], 128
+    )
+    assert len(bins) == 2
+    assert [s.job_id for s in bins[0].slots] == [0, 3]
+    assert [s.job_id for s in bins[1].slots] == [1, 2]
+    assert bins[0].lanes_used == 119 and bins[1].lanes_used == 120
+
+
+def test_packed_instance_carries_original_coefficients():
+    sizes = [30, 25]
+    probs = [_instance(i, n) for i, n in enumerate(sizes)]
+    (inst,) = pack_instances(list(enumerate(probs)), 128)
+    for slot, p in zip(inst.slots, probs):
+        s = slice(slot.offset, slot.offset + slot.n)
+        np.testing.assert_array_equal(inst.h_orig[s], np.asarray(p.h, np.float32))
+        np.testing.assert_array_equal(inst.j_orig[s, s], np.asarray(p.j, np.float32))
+    assert inst.j_orig[: sizes[0], sizes[0] :].max(initial=0.0) == 0.0
+
+
+def test_nonpositive_reads_still_drain():
+    """reads<=0 jobs run one anneal instead of crashing the tier builder
+    (regression: tier formation must clamp like the scheduler does)."""
+    assert replica_tiers([0, 17]) == [(8, [0]), (24, [1])]
+    farm = CobiFarm(1)
+    f0 = farm.submit(_instance(0, 10), jax.random.key(0), reads=0, steps=40)
+    f1 = farm.submit(_instance(1, 12), jax.random.key(1), reads=17, steps=40)
+    farm.drain()
+    assert f0.result().energies.shape[0] == 0  # legacy slice [:0] stays empty
+    assert f1.result().energies.shape == (17,)
+
+
+def test_replica_tiers_grouping():
+    # similar read counts share a tier (budget-masked), disparate ones split
+    tiers = replica_tiers([8, 6, 8, 64, 8, 60, 12])
+    assert [t[0] for t in tiers] == [16, 64]
+    assert sorted(tiers[0][1]) == [0, 1, 2, 4, 6]
+    assert sorted(tiers[1][1]) == [3, 5]
+    # uniform reads -> one tier at the bucketed count
+    assert replica_tiers([8] * 5) == [(8, [0, 1, 2, 3, 4])]
+    # a lone huge job never inflates small jobs' anneal count
+    tiers = replica_tiers([4, 256])
+    assert [t[0] for t in tiers] == [8, 256]
+
+
+def test_replica_tiers_cut_wasted_anneals():
+    """An 8-read job sharing a drain with a 256-read job must not occupy a
+    chip for 256 executions."""
+    farm = CobiFarm(1)
+    f_small = farm.submit(_instance(0, 20), jax.random.key(0), reads=8,
+                          steps=60, reduce="best")
+    farm.submit(_instance(1, 20), jax.random.key(1), reads=256, steps=60,
+                reduce="best")
+    farm.drain()
+    r = f_small.receipt()
+    hw = farm.hardware
+    assert r.chip_seconds <= 8 * hw.seconds_per_solve + 1e-12
+
+
+# ---------------------------------------------------- prescaled fast path
+
+
+def test_cobi_anneal_prescaled_fast_path_matches():
+    """Pre-dividing (h, j) by dynamics_scale and passing prescaled=True gives
+    the identical trajectory (spins) as the self-normalizing path."""
+    p = _instance(13, 22)
+    scale = float(ops.dynamics_scale(p.h, p.j))
+    key = jax.random.key(7)
+    s_auto, e_auto = ops.cobi_anneal(p.h, p.j, key, replicas=8, steps=80)
+    s_pre, e_pre = ops.cobi_anneal(
+        p.h / scale, p.j / scale, key, replicas=8, steps=80, prescaled=True
+    )
+    np.testing.assert_array_equal(np.asarray(s_auto), np.asarray(s_pre))
+    # energies are scored against the GIVEN (scaled) problem: E/scale
+    np.testing.assert_allclose(
+        np.asarray(e_pre) * scale, np.asarray(e_auto), rtol=1e-6
+    )
+    # prescaled composes with the fused epilogue
+    bs, be = ops.cobi_anneal(
+        p.h / scale, p.j / scale, key, replicas=8, steps=80,
+        prescaled=True, reduce="best",
+    )
+    i = _first_argmin(e_pre)
+    np.testing.assert_array_equal(np.asarray(bs), np.asarray(s_pre)[i])
+
+
+# ------------------------------------------------------ vectorized repair
+
+
+def test_repair_matches_naive_greedy_reference():
+    """The incremental marginal-gain repair reproduces the from-scratch
+    greedy (same flip order) on random instances, both directions."""
+    from repro.core.formulation import EsProblem
+    from repro.core.pipeline import repair_selection
+
+    def naive(problem, x):
+        x = np.asarray(x, np.int32).copy()
+        mu = np.asarray(problem.mu, np.float64)
+        beta = np.asarray(problem.beta, np.float64)
+        lam = problem.lam
+        red = beta @ x
+        while int(x.sum()) > problem.m:
+            contrib = np.where(x > 0, mu - 2.0 * lam * red, np.inf)
+            i = int(np.argmin(contrib))
+            x[i] = 0
+            red -= beta[:, i]
+        while int(x.sum()) < problem.m:
+            gain = np.where(x > 0, -np.inf, mu - 2.0 * lam * red)
+            i = int(np.argmax(gain))
+            x[i] = 1
+            red += beta[:, i]
+        return x
+
+    rng = np.random.default_rng(0)
+    for trial in range(6):
+        n = 40
+        mu = rng.uniform(0.2, 1.0, n)
+        b = rng.uniform(0.0, 0.6, (n, n))
+        beta = (b + b.T) / 2
+        np.fill_diagonal(beta, 0.0)
+        problem = EsProblem(mu=mu, beta=beta, m=8, lam=0.5)
+        x = rng.integers(0, 2, n)
+        got = repair_selection(problem, x)
+        want = naive(problem, x)
+        assert got.sum() == problem.m
+        np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
