@@ -1,0 +1,111 @@
+"""Regression gate for benchmark JSON dumps (CI ``bench-smoke``).
+
+Compares a fresh ``farm_throughput --json`` dump against the checked-in
+baseline (``benchmarks/BENCH_farm_throughput.json``, refreshed by any PR
+that intentionally moves the numbers):
+
+  * every scenario present in the BASELINE must exist in the new run, and
+    every tracked metric must be present, finite and positive -- violations
+    hard-fail (exit 1).  This is the actual gate: a refactor that silently
+    drops a scenario, or a code path that starts emitting NaN/zero rps,
+    cannot ride a green CI.
+  * relative deviations beyond ``--tolerance`` (default +-30%) only WARN:
+    the CI runner is a noisy shared 2-core box, so wall-clock metrics swing
+    far more than any real regression signal.  ``--strict`` promotes
+    deviation warnings to failures for local A/B runs on quiet machines.
+
+Usage::
+
+  python benchmarks/compare.py benchmarks/BENCH_farm_throughput.json \
+      BENCH_new.json [--tolerance 0.30] [--strict]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+# Metrics gated per scenario (when the baseline scenario carries them).
+TRACKED = ("rps", "occupancy", "bytes_per_req", "p50_ms", "p95_ms",
+           "rps_vs_lockstep")
+
+
+def _check_scenario(name: str, brec: dict, nrec: dict, tolerance: float,
+                    failures: list, warnings: list) -> None:
+    for key in TRACKED:
+        if key not in brec:
+            continue
+        bv = brec[key]
+        nv = nrec.get(key)
+        if nv is None:
+            failures.append(f"{name}.{key}: metric missing from new run")
+            continue
+        if not isinstance(nv, (int, float)) or not math.isfinite(float(nv)):
+            failures.append(f"{name}.{key}: not a finite number ({nv!r})")
+            continue
+        if nv <= 0.0:
+            failures.append(f"{name}.{key}: non-positive ({nv!r})")
+            continue
+        if (not isinstance(bv, (int, float)) or not math.isfinite(float(bv))
+                or bv <= 0):
+            failures.append(f"{name}.{key}: baseline itself is bad ({bv!r}); "
+                            f"refresh benchmarks/BENCH_farm_throughput.json")
+            continue
+        rel = (nv - bv) / bv
+        if abs(rel) > tolerance:
+            warnings.append(
+                f"{name}.{key}: {bv:.4g} -> {nv:.4g} ({rel:+.0%}, "
+                f"tolerance +-{tolerance:.0%})"
+            )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("new", help="freshly generated JSON")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="relative deviation that triggers a warning")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat deviations as failures (quiet machines)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    if not base:
+        print("FAIL: baseline is empty")
+        return 1
+
+    failures: list = []
+    warnings: list = []
+    for name in sorted(base):
+        nrec = new.get(name)
+        if nrec is None:
+            failures.append(f"{name}: scenario missing from new run")
+            continue
+        _check_scenario(name, base[name], nrec, args.tolerance,
+                        failures, warnings)
+    for name in sorted(set(new) - set(base)):
+        print(f"note: new scenario {name} (not in baseline; consider "
+              f"refreshing the baseline)")
+
+    for w in warnings:
+        print(f"warn: {w}")
+    for f_ in failures:
+        print(f"FAIL: {f_}")
+    if args.strict and warnings:
+        print(f"{len(warnings)} deviation(s) beyond tolerance (--strict)")
+        return 1
+    if failures:
+        print(f"{len(failures)} hard failure(s)")
+        return 1
+    print(f"ok: {len(base)} scenario(s) compared, "
+          f"{len(warnings)} deviation warning(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
 from repro.core.hardware import TPU_V5E

@@ -20,7 +20,6 @@ from repro.core import (
     quantize_ising,
     solve_es,
 )
-from repro.core.formulation import qubo_improved
 from repro.core.metrics import normalized_objective, reference_bounds
 from repro.data.synthetic import benchmark_suite, synthetic_benchmark
 from benchmarks.common import emit

@@ -3,14 +3,17 @@ summarization requests served through the engine, with per-request latency
 and projected COBI energy, plus a solver A/B comparison.
 
   PYTHONPATH=src python examples/summarize_service.py [--requests 6]
+
+``--policy bin-full|deadline|timer`` makes the farm self-draining: the
+engine never supplies a round barrier, futures resolve from the background
+drive loop, and results stay bit-identical to the manual default.
 """
 
 import argparse
 
-import numpy as np
-
 from repro.core import SolveConfig
 from repro.data.synthetic import synthetic_document
+from repro.farm import DRAIN_POLICIES
 from repro.serving import SummarizationEngine
 
 
@@ -20,6 +23,8 @@ def main():
     ap.add_argument("--solver", default="cobi", choices=["cobi", "tabu", "sa"])
     ap.add_argument("--chips", type=int, default=4,
                     help="simulated COBI chips in the farm (0 = legacy loop)")
+    ap.add_argument("--policy", default="manual", choices=list(DRAIN_POLICIES),
+                    help="farm drain policy (non-manual = self-draining farm)")
     args = ap.parse_args()
 
     engine = SummarizationEngine(
@@ -27,6 +32,7 @@ def main():
                     steps=300, p=20, q=10),
         score_against_exact=True,
         n_chips=args.chips,
+        policy=args.policy,
     )
 
     # Mixed-size request batch: some need decomposition (>59 spins).
@@ -61,6 +67,7 @@ def main():
     print("First summary:")
     for s in responses[0].summary:
         print(f"  - {s}")
+    engine.close()
 
 
 if __name__ == "__main__":

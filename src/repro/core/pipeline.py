@@ -6,7 +6,7 @@ best-of-iterations under the FP objective -> optional decomposition driver.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +47,17 @@ class SolveConfig:
     decompose: bool = False
     p: int = 20
     q: int = 10
+    # Farm-scheduled decomposition only: plan all windows of one oversized
+    # request ahead (speculating on survivors) so they pack into the same
+    # drains as other traffic, instead of one window per round.  Results are
+    # bit-identical either way; see core.decomposition.PipelinedDecomposition.
+    # Firm (guess-invariant) windows always submit immediately; windows whose
+    # membership rests on speculated survivors submit only within
+    # `speculate_depth` of the resolve frontier, bounding the anneals a wrong
+    # guess can waste.
+    pipeline_windows: bool = True
+    speculate_windows: bool = True
+    speculate_depth: int = 2
 
 
 @dataclasses.dataclass
@@ -242,13 +253,14 @@ def _solve_decomposed(problem: EsProblem, key: Array, cfg: SolveConfig) -> Solve
 # ---------------------------------------------------------------------------
 
 
-def _iter_cobi_iterations(
-    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int
+def _submit_cobi_iterations(
+    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
+    deadline: Optional[float] = None,
 ):
-    """Submit the instance's cfg.iterations anneal jobs, yield, reduce.
+    """Submit the instance's cfg.iterations anneal jobs; returns the futures.
 
     Jobs go in with ``reduce="best"``: the per-iteration argmin-energy read is
-    the ONLY thing this reduce consumes, so the farm's fused epilogue keeps
+    the ONLY thing the reduce consumes, so the farm's fused epilogue keeps
     replica spins/energies on device and each future resolves to just the
     winner (bit-identical to all-reads + host argmin on integer instances).
     """
@@ -264,12 +276,16 @@ def _iter_cobi_iterations(
         instances = [q.ising for q in quantized]
     else:
         instances = [ising_fp] * cfg.iterations
-    futures = [
+    return [
         farm.submit(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
-                    priority=priority, check=check, reduce="best")
+                    priority=priority, deadline=deadline, check=check,
+                    reduce="best")
         for inst, (_, k_solve) in zip(instances, keypairs)
     ]
-    yield futures
+
+
+def _reduce_cobi_iterations(problem: EsProblem, cfg: SolveConfig, futures):
+    """Consume one instance's iteration futures -> best-of + accounting."""
     best_x, best_obj, curve = None, -np.inf, []
     chip_seconds = energy = 0.0
     for fut in futures:
@@ -287,6 +303,16 @@ def _iter_cobi_iterations(
     return best_x, best_obj, curve, chip_seconds, energy
 
 
+def _iter_cobi_iterations(
+    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
+    deadline: Optional[float] = None,
+):
+    """Submit the instance's iteration jobs, yield (round barrier), reduce."""
+    futures = _submit_cobi_iterations(problem, key, cfg, farm, priority, deadline)
+    yield futures
+    return _reduce_cobi_iterations(problem, cfg, futures)
+
+
 def iter_solve_es(
     problem: EsProblem,
     key: Array,
@@ -294,45 +320,154 @@ def iter_solve_es(
     *,
     farm,
     priority: int = 0,
+    deadline: Optional[float] = None,
 ):
     """Generator form of :func:`solve_es` over a chip farm (cobi only).
 
-    Yields once per submission round (one round for a direct solve, one per
-    window for a decomposed solve); returns a :class:`SolveReport` whose
-    chip_seconds / chip_energy_joules come from the farm's job receipts.
+    Yields once per submission round (one round for a direct solve; a
+    decomposed solve yields once per window under ``pipeline_windows=False``
+    and only on unresolved frontiers under the default pipelined driver);
+    returns a :class:`SolveReport` whose chip_seconds / chip_energy_joules
+    come from the farm's job receipts.  ``deadline`` (absolute simulated
+    time) is stamped on every submitted job, which is what the farm's
+    ``policy="deadline"`` watermark trigger keys on.
     """
     if cfg.solver != "cobi":
         raise ValueError(f"farm scheduling requires solver='cobi', got {cfg.solver!r}")
     if cfg.decompose:
-        k_dec, _ = jax.random.split(key)
-        sub_cfg = dataclasses.replace(cfg, decompose=False)
-        steps = decomp.decompose_steps(problem, k_dec, p=cfg.p, q=cfg.q)
-        chip_seconds = energy = 0.0
-        item = next(steps)
-        while True:
-            sub, m, k_sub = item
-            sel, _, _, cs, en = yield from _iter_cobi_iterations(
-                sub.with_m(m), k_sub, sub_cfg, farm, priority
-            )
-            chip_seconds += cs
-            energy += en
-            try:
-                item = steps.send(sel)
-            except StopIteration as done:
-                selection, trace = done.value
-                break
-        if cfg.repair:
-            selection = repair_selection(problem, selection)
-        obj = float(es_objective(problem, jnp.asarray(selection)))
-        return SolveReport(
-            selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations,
-            chip_seconds, energy,
-        )
+        if cfg.pipeline_windows:
+            return (yield from _iter_cobi_decomposed(
+                problem, key, cfg, farm, priority, deadline
+            ))
+        return (yield from _iter_cobi_decomposed_lockstep(
+            problem, key, cfg, farm, priority, deadline
+        ))
     best_x, best_obj, curve, chip_seconds, energy = yield from _iter_cobi_iterations(
-        problem, key, cfg, farm, priority
+        problem, key, cfg, farm, priority, deadline
     )
     return SolveReport(
         best_x, best_obj, np.asarray(curve), cfg.iterations, chip_seconds, energy
+    )
+
+
+def _iter_cobi_decomposed_lockstep(
+    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
+    deadline: Optional[float] = None,
+):
+    """Legacy decomposed farm driver: ONE window in flight at a time.
+
+    Kept as the ``pipeline_windows=False`` fallback (and as the reference the
+    pipelined driver is equivalence-tested against): each window submits,
+    yields a round, reduces, and only then does the next window's membership
+    get computed.
+    """
+    k_dec, _ = jax.random.split(key)
+    sub_cfg = dataclasses.replace(cfg, decompose=False)
+    steps = decomp.decompose_steps(problem, k_dec, p=cfg.p, q=cfg.q)
+    chip_seconds = energy = 0.0
+    item = next(steps)
+    while True:
+        sub, m, k_sub = item
+        sel, _, _, cs, en = yield from _iter_cobi_iterations(
+            sub.with_m(m), k_sub, sub_cfg, farm, priority, deadline
+        )
+        chip_seconds += cs
+        energy += en
+        try:
+            item = steps.send(sel)
+        except StopIteration as done:
+            selection, trace = done.value
+            break
+    if cfg.repair:
+        selection = repair_selection(problem, selection)
+    obj = float(es_objective(problem, jnp.asarray(selection)))
+    return SolveReport(
+        selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations,
+        chip_seconds, energy,
+    )
+
+
+def _iter_cobi_decomposed(
+    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
+    deadline: Optional[float] = None,
+):
+    """Pipelined decomposed farm driver: ALL planned windows in flight.
+
+    Plans every window of the request up front via
+    :class:`repro.core.decomposition.PipelinedDecomposition` (speculating on
+    survivors when ``cfg.speculate_windows``), submits each planned window's
+    stochastic-rounding iterations immediately, and reconciles as real window
+    outcomes arrive: windows whose speculated membership survives keep their
+    in-flight futures, invalidated ones are re-planned and re-submitted under
+    the same per-window key.  One oversized request's windows therefore pack
+    into the same drains as the rest of the traffic instead of serializing
+    round by round; the final selection is bit-identical to the lockstep
+    driver (memberships and keys match the sequential bookkeeping exactly).
+
+    Yields only when the frontier window's futures are not yet resolved --
+    under ``policy="manual"`` lockstep driving that is the round barrier the
+    engine drains behind; under background drain policies the reduce blocks
+    on the futures directly and the generator may never yield at all.
+    """
+    k_dec, _ = jax.random.split(key)
+    sub_cfg = dataclasses.replace(cfg, decompose=False)
+    plan = decomp.PipelinedDecomposition(
+        problem, k_dec, p=cfg.p, q=cfg.q, speculate=cfg.speculate_windows
+    )
+    inflight: dict = {}  # (seq, indices) -> (subproblem, futures)
+    windows_submitted = 0
+    chip_seconds = energy = 0.0
+    consumed: set = set()
+    while not plan.done():
+        for spec in plan.pending_specs():
+            if (spec.speculative
+                    and spec.seq - plan.n_resolved() > cfg.speculate_depth):
+                # Membership rests on guessed survivors and is far from the
+                # frontier: hold it back -- by the time it is within depth,
+                # more outcomes are real and the guess is far more likely to
+                # survive reconciliation.
+                continue
+            fkey = (spec.seq, spec.indices)
+            if fkey not in inflight:
+                sub = problem.subproblem(np.asarray(spec.indices)).with_m(spec.m)
+                inflight[fkey] = (
+                    sub,
+                    _submit_cobi_iterations(
+                        sub, spec.key, sub_cfg, farm, priority, deadline
+                    ),
+                )
+                windows_submitted += 1
+        spec = plan.next_spec()
+        fkey = (spec.seq, spec.indices)
+        sub, futures = inflight[fkey]
+        if not all(f.done() for f in futures):
+            yield futures
+        sel, _, _, cs, en = _reduce_cobi_iterations(sub, sub_cfg, futures)
+        chip_seconds += cs
+        energy += en
+        consumed.add(fkey)
+        plan.resolve(sel)
+    # Mis-speculated windows that already annealed burned real chip time:
+    # bill them to this request (their receipts exist iff a drain ran them).
+    # Still-queued orphans are cancelled so they never pollute a later,
+    # unrelated drain's packing/accounting.
+    for fkey, (_, futures) in inflight.items():
+        if fkey in consumed:
+            continue
+        for fut in futures:
+            if fut.done():
+                receipt = fut.receipt()
+                chip_seconds += receipt.chip_seconds
+                energy += receipt.energy_joules
+            else:
+                fut.cancel()
+    selection, _trace = plan.final
+    if cfg.repair:
+        selection = repair_selection(problem, selection)
+    obj = float(es_objective(problem, jnp.asarray(selection)))
+    return SolveReport(
+        selection, obj, np.asarray([obj]), windows_submitted * cfg.iterations,
+        chip_seconds, energy,
     )
 
 

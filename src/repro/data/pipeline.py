@@ -8,7 +8,7 @@ each host materializes rows [host_id::num_hosts] of every global batch."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -17,11 +17,10 @@ compression experiments.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ref as kref
 

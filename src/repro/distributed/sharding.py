@@ -13,7 +13,7 @@ cost_analysis (DESIGN.md sec. 5).
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

@@ -17,13 +17,18 @@ package turns the solver into a *farm*:
     each other's bins (bounded wasted anneals).
 
   * :mod:`repro.farm.scheduler` -- :class:`CobiFarm` accepts solve jobs with
-    priorities/deadlines and returns futures.  ``drain()`` groups jobs by
-    anneal schedule and replica tier, packs them, pads the super-instance
-    stack to a batch bucket (shape-bucketing: jit recompiles scale with the
-    bucket count, not with request diversity), and runs ONE batched Pallas
-    launch with grid (instance, replica-block) -- the software picture of
-    ``n_chips`` physical COBI arrays each programmed once and executed R
-    times.  ``reduce="best"`` jobs resolve through the fused
+    priorities/deadlines and returns thread-safe, ``await``-able futures.
+    A drain groups jobs by anneal schedule and replica tier, packs them,
+    pads the super-instance stack to a batch bucket (shape-bucketing: jit
+    recompiles scale with the bucket count, not with request diversity), and
+    runs ONE batched Pallas launch with grid (instance, replica-block) --
+    the software picture of ``n_chips`` physical COBI arrays each programmed
+    once and executed R times.  Drains are fired either by the caller
+    (``policy="manual"``) or by a background drive loop that launches a bin
+    the moment best-fit packing estimates it full, a (schedule, tier) group
+    when a job's deadline enters its watermark, or everything on a timer
+    tick -- results are bit-identical across policies, so the drain policy
+    is purely a latency/occupancy knob.  ``reduce="best"`` jobs resolve through the fused
     anneal→readout→best-of epilogue: each job's winning read is selected ON
     DEVICE against the original coefficients, so a drain transfers O(lanes)
     per super-instance instead of every replica's state.  Per-chip occupancy
@@ -39,19 +44,24 @@ gets dense MXU tiles instead of zero padding.
 
 from repro.farm.packing import (  # noqa: F401
     PackedInstance,
+    PackEstimate,
     Slot,
     bucket_to,
+    estimate_packing,
     pack_instances,
     replica_tiers,
 )
 from repro.farm.scheduler import (  # noqa: F401
     BATCH_BUCKET,
+    DRAIN_POLICIES,
     REPLICA_BUCKET,
     REPLICA_TIER_RATIO,
     ChipStats,
     CobiFarm,
     FarmFuture,
     FarmJob,
+    FarmJobCancelled,
+    FarmPendingError,
     FarmStats,
     JobReceipt,
     solve_many,

@@ -130,6 +130,72 @@ def pack_instances(
     return bins
 
 
+@dataclasses.dataclass(frozen=True)
+class PackEstimate:
+    """Shape-only best-fit-decreasing estimate of how a job group would pack.
+
+    Built by :func:`estimate_packing` from lane counts alone -- no coefficient
+    arrays -- so drain policies can evaluate "would this group close a bin?"
+    on every submission.  ``bins[k]`` holds the indices (into the input
+    ``sizes`` sequence) that landed in bin ``k``; ``lanes_used[k]`` its lane
+    total.  The estimate sorts size-decreasing (the scheduler's order within
+    one priority class), so it matches the real pack exactly when priorities
+    and deadlines are uniform and approximates it otherwise.
+    """
+
+    capacity: int
+    bins: List[List[int]]
+    lanes_used: List[int]
+
+    @property
+    def n_bins(self) -> int:
+        return len(self.bins)
+
+    @property
+    def occupancies(self) -> List[float]:
+        return [u / self.capacity for u in self.lanes_used]
+
+    @property
+    def max_occupancy(self) -> float:
+        return max(self.occupancies, default=0.0)
+
+    def closed_bins(self, target: float) -> List[int]:
+        """Bins at or above ``target`` occupancy (ready to launch)."""
+        return [k for k, occ in enumerate(self.occupancies) if occ >= target]
+
+
+def estimate_packing(sizes: Sequence[int], capacity: int = LANE) -> PackEstimate:
+    """Best-fit-decreasing bin estimate over lane counts only.
+
+    Mirrors :func:`pack_instances` (tightest bin that still fits, ties to the
+    earliest) applied in size-decreasing order, but tracks nothing except
+    which input index went to which bin -- cheap enough for the scheduler's
+    per-submit drain-policy triggers.
+    """
+    order = sorted(range(len(sizes)), key=lambda i: (-sizes[i], i))
+    bins: List[List[int]] = []
+    free: List[int] = []
+    for i in order:
+        n = int(sizes[i])
+        if n > capacity:
+            raise ValueError(f"instance with {n} spins exceeds chip capacity {capacity}")
+        target = None
+        for b, f in enumerate(free):
+            if f >= n and (target is None or f < free[target]):
+                target = b
+        if target is None:
+            bins.append([])
+            free.append(capacity)
+            target = len(bins) - 1
+        bins[target].append(i)
+        free[target] -= n
+    return PackEstimate(
+        capacity=capacity,
+        bins=bins,
+        lanes_used=[capacity - f for f in free],
+    )
+
+
 def replica_tiers(
     reads: Sequence[int],
     *,

@@ -3,7 +3,7 @@
 ``CobiFarm`` simulates a farm of ``n_chips`` COBI chips, each with
 ``lanes_per_chip`` spin lanes.  Jobs (one ≤59-spin integer Ising instance
 each) are submitted with a priority/deadline and return a :class:`FarmFuture`.
-``drain()`` flushes the queue:
+A drain flushes (part of) the queue:
 
   1. jobs are grouped by anneal schedule ``(steps, dt, ks_max, reduce)`` --
      packed instances share one trajectory, so the schedule must match --
@@ -27,6 +27,56 @@ each) are submitted with a priority/deadline and return a :class:`FarmFuture`.
   4. futures resolve to :class:`repro.solvers.base.SolverResult` plus a
      :class:`JobReceipt` carrying the paper's latency/energy accounting.
 
+Drain-policy state machine (``policy=`` at construction)::
+
+                    submit()                    drain trigger
+    job:  SUBMITTED ---------> QUEUED ------------------------> RUNNING -> DONE
+                                  |                                ^
+                                  | (job result/receipt stored,    |
+                                  v  future._finish())        one batched
+                               cleared by clear_completed()   Pallas launch
+
+    policy="manual"   : the only trigger is a caller-side ``drain()``; a
+                        ``result()`` on a QUEUED job raises
+                        :class:`FarmPendingError` instead of blocking forever.
+    policy="timer"    : a background drive loop drains EVERYTHING pending
+                        every ``timer_interval`` wall seconds.
+    policy="bin-full" : after every submission the drive loop re-estimates,
+                        per (schedule, tier) group, how the group would
+                        best-fit pack (:func:`repro.farm.packing.
+                        estimate_packing`).  Estimated bins at or above
+                        ``bin_full_target`` lane occupancy launch in chunks
+                        of ``bin_full_min_bins`` (default ``n_chips`` -- one
+                        chip cycle; constant launch width = stable jit
+                        shapes) while a burst is arriving; once the queue
+                        has been still for a short debounce, closed bins
+                        launch regardless of count.  Partial bins keep
+                        accumulating pack-mates until the ``linger``
+                        quiescence fallback flushes everything pending.
+    policy="deadline" : a (schedule, tier) group is drained as soon as any of
+                        its jobs has ``deadline - sim_now - estimated group
+                        latency <= deadline_watermark`` (latency estimate:
+                        estimated BFD bin count, round-robin over chips,
+                        ``tier_reads * seconds_per_solve`` per bin cycle --
+                        conservative: the whole-group worst case).  Same
+                        ``linger`` quiescence fallback as bin-full.
+
+All non-manual policies run drains on ONE background daemon thread, and
+every drain -- background or caller-side -- serializes on an execution
+lock, so kernel launches never interleave; the state lock guarding shared
+state (queue, results, receipts, chip stats, the simulated clock) is held
+only to dequeue due jobs and to commit their results, NEVER across a
+kernel launch, so submissions and result reads proceed while a drain's
+anneal is still running (the overlap that makes background drains pay for
+themselves on burst traffic).  ``FarmFuture`` is therefore thread-safe
+(``result(timeout=)`` blocks on an event set by the draining thread) and
+awaitable (``__await__`` bridges the done-callback onto the running asyncio
+loop with ``call_soon_threadsafe``).  Bit-exactness across policies: each
+job's initial phases are drawn from its OWN key at its OWN bucketed read
+count and packed blocks do not interact, so *which* drain a job lands in
+changes accounting (cycles, receipts, sim clock) but never its spins or
+energies.
+
 Hardware-time model: each super-instance occupies one chip for
 ``tier_reads * seconds_per_solve`` (sequential 200 us executions of the
 programmed array).  Bins are assigned round-robin to chips; a drain advances
@@ -38,11 +88,15 @@ Host↔device traffic of every launch is metered into ``FarmStats.bytes_h2d``
 
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import functools
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+import time
+import traceback
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +104,13 @@ import numpy as np
 
 from repro.core.formulation import IsingProblem
 from repro.core.hardware import COBI, SolverHardware
-from repro.farm.packing import LANE, bucket_to, pack_instances, replica_tiers
+from repro.farm.packing import (
+    LANE,
+    bucket_to,
+    estimate_packing,
+    pack_instances,
+    replica_tiers,
+)
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.solvers.base import SolverResult
@@ -62,6 +122,34 @@ BATCH_BUCKET = 4  # super-instance batches are padded to a multiple of this
 REPLICA_BUCKET = 8  # read counts are padded to a multiple of this
 REPLICA_TIER_RATIO = 2.0  # max/min read ratio allowed to share a tier
 REDUCE_MODES = ("none", "best")
+DRAIN_POLICIES = ("manual", "bin-full", "deadline", "timer")
+
+
+def _batch_pad(b_real: int) -> int:
+    """Super-instance batch padding: powers of two below BATCH_BUCKET, then
+    BATCH_BUCKET multiples.  Small drains (common under bin-full/deadline
+    policies, which launch single closed bins) pay for the bins they have
+    instead of a full bucket of zero-padded anneals; the jit cache still
+    sees a bounded shape set {1, 2, 4, 8, 12, ...}."""
+    if b_real >= BATCH_BUCKET:
+        return bucket_to(b_real, BATCH_BUCKET)
+    pad = 1
+    while pad < b_real:
+        pad *= 2
+    return pad
+
+
+class FarmPendingError(RuntimeError):
+    """``result()``/``receipt()``/``await`` on a job nothing will ever drain.
+
+    Raised instead of blocking forever when the farm's drain policy is
+    ``"manual"`` and the job is still queued: under manual policy only a
+    caller-side ``drain()`` resolves futures.
+    """
+
+
+class FarmJobCancelled(RuntimeError):
+    """The job was cancelled (``FarmFuture.cancel``) before it ran."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,27 +213,122 @@ class FarmStats:
         return used / cap if cap else 0.0
 
 
-class FarmFuture:
-    """Handle to a submitted job; ``result()`` lazily drains the farm."""
+def _wake_waiter(waiter: "asyncio.Future") -> None:
+    if not waiter.done():
+        waiter.set_result(None)
 
-    __slots__ = ("_farm", "job_id")
+
+class FarmFuture:
+    """Thread-safe, awaitable handle to a submitted job.
+
+    ``result(timeout=)`` / ``receipt(timeout=)`` block until a drain (manual
+    or background, depending on the farm's policy) completes the job;
+    ``add_done_callback`` fires from the draining thread (callbacks must be
+    quick and must not block -- ``loop.call_soon_threadsafe`` is the intended
+    kind of payload); ``await future`` suspends the current asyncio task
+    until the job completes, without tying up the event loop.
+    """
+
+    __slots__ = ("_farm", "job_id", "_event", "_callbacks")
 
     def __init__(self, farm: "CobiFarm", job_id: int):
         self._farm = farm
         self.job_id = job_id
+        self._event = threading.Event()
+        self._callbacks: List[Callable[["FarmFuture"], None]] = []
 
     def done(self) -> bool:
-        return self.job_id in self._farm._results
+        return self._event.is_set()
 
-    def result(self) -> SolverResult:
-        if not self.done():
-            self._farm.drain()
-        return self._farm._results[self.job_id]
+    def result(self, timeout: Optional[float] = None) -> SolverResult:
+        self._wait(timeout)
+        self._farm._raise_job_error(self.job_id)
+        return self._farm._take(self.job_id, self._farm._results)
 
-    def receipt(self) -> JobReceipt:
-        if not self.done():
-            self._farm.drain()
-        return self._farm._receipts[self.job_id]
+    def receipt(self, timeout: Optional[float] = None) -> JobReceipt:
+        self._wait(timeout)
+        self._farm._raise_job_error(self.job_id)
+        return self._farm._take(self.job_id, self._farm._receipts)
+
+    def cancel(self) -> bool:
+        """Dequeue the job if it has not started; returns True on success.
+
+        A cancelled future is done; ``result()``/``receipt()`` raise
+        :class:`FarmJobCancelled`.  Jobs already running (or finished)
+        are not interrupted and False is returned."""
+        farm = self._farm
+        with farm._lock:
+            for i, job in enumerate(farm._pending):
+                if job.job_id == self.job_id:
+                    del farm._pending[i]
+                    farm._jobs.pop(self.job_id, None)
+                    farm._futures.pop(self.job_id, None)
+                    farm._errors[self.job_id] = FarmJobCancelled(
+                        f"farm job {self.job_id} was cancelled before running"
+                    )
+                    self._finish()
+                    return True
+        return False
+
+    def add_done_callback(self, fn: Callable[["FarmFuture"], None]) -> None:
+        """Run ``fn(self)`` once the job completes (immediately if it has)."""
+        with self._farm._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def __await__(self):
+        if not self._event.is_set():
+            self._raise_if_never_drained()
+            loop = asyncio.get_running_loop()
+            waiter = loop.create_future()
+            self.add_done_callback(
+                lambda _fut: loop.call_soon_threadsafe(_wake_waiter, waiter)
+            )
+            yield from waiter.__await__()
+        return self.result()
+
+    # ------------------------------------------------------------ internals
+
+    def _wait(self, timeout: Optional[float]) -> None:
+        if self._event.is_set():
+            return
+        self._raise_if_never_drained()
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"farm job {self.job_id} did not complete within {timeout}s "
+                f"(policy={self._farm.policy!r})"
+            )
+
+    def _raise_if_never_drained(self) -> None:
+        farm = self._farm
+        if farm.policy != "manual":
+            return
+        with farm._lock:
+            if self._event.is_set():
+                return
+            if any(j.job_id == self.job_id for j in farm._pending):
+                raise FarmPendingError(
+                    f"farm job {self.job_id} is still queued and the farm's "
+                    f"drain policy is 'manual': no background loop will run "
+                    f"it -- call farm.drain(), or construct the farm with "
+                    f"policy='bin-full', 'deadline', or 'timer'"
+                )
+
+    def _finish(self) -> None:
+        """Mark done + fire callbacks; called by the farm with its lock held,
+        after the job's result AND receipt (or error) are stored.  Callback
+        exceptions are reported and swallowed -- one broken callback must
+        not leave sibling futures of the same drain unresolved or kill the
+        background drive thread."""
+        self._event.set()
+        callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:  # noqa: BLE001 -- deliberate isolation
+                traceback.print_exc()
 
 
 class CobiFarm:
@@ -160,30 +343,67 @@ class CobiFarm:
         impl: str = "auto",
         hardware: SolverHardware = COBI,
         check: bool = True,
+        policy: str = "manual",
+        timer_interval: float = 0.02,
+        linger: float = 0.02,
+        bin_full_target: float = 0.9,
+        bin_full_min_bins: Optional[int] = None,
+        deadline_watermark: float = 0.0,
     ):
         if n_chips < 1:
             raise ValueError(f"need >= 1 chip, got {n_chips}")
         if lanes_per_chip % LANE != 0:
             raise ValueError(f"lanes_per_chip must be a multiple of {LANE}")
+        if policy not in DRAIN_POLICIES:
+            raise ValueError(f"policy must be one of {DRAIN_POLICIES}, got {policy!r}")
+        if timer_interval <= 0 or linger <= 0:
+            raise ValueError("timer_interval and linger must be positive")
+        if not 0.0 < bin_full_target <= 1.0:
+            raise ValueError(f"bin_full_target must be in (0, 1], got {bin_full_target}")
         self.n_chips = n_chips
         self.lanes_per_chip = lanes_per_chip
         self.max_spins = max_spins
         self.impl = impl
         self.hardware = hardware
         self.check = check
+        self.policy = policy
+        self.timer_interval = timer_interval
+        self.linger = linger
+        self.bin_full_target = bin_full_target
+        # Launch closed bins only once a full chip cycle's worth are ready:
+        # n_chips bins anneal in parallel on the simulated hardware, and on
+        # the TPU side same-sized launches keep the jit shape set tiny while
+        # amortizing per-launch dispatch.  Stragglers ride the linger flush.
+        self.bin_full_min_bins = (
+            n_chips if bin_full_min_bins is None else max(1, bin_full_min_bins)
+        )
+        self.deadline_watermark = deadline_watermark
         self._ids = itertools.count()
         self._pending: List[FarmJob] = []
         self._jobs: Dict[int, FarmJob] = {}
+        self._futures: Dict[int, FarmFuture] = {}
         self._results: Dict[int, SolverResult] = {}
         self._receipts: Dict[int, JobReceipt] = {}
+        self._errors: Dict[int, BaseException] = {}
         self._sim_time = 0.0
         self._cycle = 0  # global chip-cycle counter
         self._drains = 0
         self._bytes_h2d = 0
         self._bytes_d2h = 0
-        self._chips = [
-            ChipStats(chip_id=c) for c in range(n_chips)
-        ]
+        self._chips = [ChipStats(chip_id=c) for c in range(n_chips)]
+        self._lock = threading.RLock()
+        self._exec_lock = threading.Lock()  # serializes kernel execution
+        self._wakeup = threading.Condition(self._lock)
+        self._driver: Optional[threading.Thread] = None
+        self._closed = False
+        self._last_submit = time.monotonic()
+        self._last_drain = time.monotonic()
+        self._lanes_since_wake = 0
+        self._flush_requested = False
+        # Background evaluation cadence: half the relevant trigger horizon.
+        horizon = timer_interval if policy == "timer" else linger
+        self._tick = max(1e-3, horizon / 2.0)
+        self._debounce = min(5e-3, linger / 2.0)
 
     # ------------------------------------------------------------------ API
 
@@ -205,7 +425,10 @@ class CobiFarm:
 
         ``reduce="best"`` resolves the future to only the job's best read
         (SolverResult with (1, N) spins / (1,) energy) through the fused
-        on-device epilogue; ``"none"`` returns every read.
+        on-device epilogue; ``"none"`` returns every read.  Under non-manual
+        drain policies the background drive loop is nudged after every
+        submission, so triggers (a bin estimated full, a deadline inside its
+        watermark) fire without any caller involvement.
         """
         if ising.n > self.max_spins:
             raise ValueError(
@@ -217,42 +440,177 @@ class CobiFarm:
         do_check = self.check if check is None else check
         if do_check:
             check_programmable(ising, max_spins=self.max_spins)
-        job = FarmJob(
-            job_id=next(self._ids),
-            ising=ising,
-            key=key,
-            reads=int(reads),
-            steps=int(steps),
-            dt=float(dt),
-            ks_max=float(ks_max),
-            priority=int(priority),
-            deadline=deadline,
-            submit_sim_time=self._sim_time,
-            reduce=reduce,
-        )
-        self._pending.append(job)
-        self._jobs[job.job_id] = job
-        return FarmFuture(self, job.job_id)
+        with self._wakeup:
+            if self._closed:
+                raise RuntimeError("farm is closed")
+            job = FarmJob(
+                job_id=next(self._ids),
+                ising=ising,
+                key=key,
+                reads=int(reads),
+                steps=int(steps),
+                dt=float(dt),
+                ks_max=float(ks_max),
+                priority=int(priority),
+                deadline=deadline,
+                submit_sim_time=self._sim_time,
+                reduce=reduce,
+            )
+            self._pending.append(job)
+            self._jobs[job.job_id] = job
+            future = FarmFuture(self, job.job_id)
+            self._futures[job.job_id] = future
+            self._last_submit = time.monotonic()
+            if self.policy != "manual":
+                if self._driver is None:
+                    self._driver = threading.Thread(
+                        target=self._drive_loop,
+                        name="cobi-farm-drive",
+                        daemon=True,
+                    )
+                    self._driver.start()
+                # Wake the drive loop only when this submission could have
+                # changed a trigger: a bin-full estimate cannot close a NEW
+                # bin until ~a chip's worth of fresh lanes arrived, and a
+                # deadline trigger only moves on deadline-carrying jobs.
+                # Waking (and re-estimating) on every submission measurably
+                # slows the submitting thread on small hosts; the periodic
+                # tick covers everything else.
+                self._lanes_since_wake += ising.n
+                wake = (
+                    self._lanes_since_wake
+                    >= self.bin_full_target * self.lanes_per_chip
+                )
+                if self.policy == "deadline":
+                    wake = wake or deadline is not None
+                elif self.policy == "timer":
+                    wake = False  # pure tick cadence
+                if wake:
+                    self._lanes_since_wake = 0
+                    self._wakeup.notify_all()
+        return future
 
     def drain(self) -> int:
-        """Pack and execute every pending job; returns the number completed."""
-        if not self._pending:
-            return 0
-        pending, self._pending = self._pending, []
-        groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
-        for job in pending:
-            gkey = (job.steps, job.dt, job.ks_max, job.reduce)
-            groups.setdefault(gkey, []).append(job)
-        for gkey in sorted(groups):
-            jobs = groups[gkey]
-            tiers = replica_tiers(
-                [j.reads for j in jobs],
-                bucket=REPLICA_BUCKET, ratio=REPLICA_TIER_RATIO,
-            )
-            for tier_reads, idxs in tiers:
-                self._run_group(tier_reads, gkey, [jobs[i] for i in idxs])
-        self._drains += 1
-        return len(pending)
+        """Pack and execute every pending job; returns the number completed.
+
+        Always available -- under non-manual policies this is a manual flush
+        on top of whatever the background loop is doing (the execution lock
+        keeps the two from interleaving kernel launches).
+        """
+        with self._exec_lock:
+            with self._lock:
+                if not self._pending:
+                    return 0
+                pending, self._pending = self._pending, []
+            return self._execute(pending)
+
+    def flush_hint(self) -> None:
+        """Signal that no more traffic is imminent (end of a burst).
+
+        Non-blocking and advisory: the background drive loop treats the
+        queue as already quiescent and flushes pending work on its next
+        wakeup (notified immediately) instead of waiting out ``linger``.
+        The producer-side flush of serving systems (Kafka's
+        ``producer.flush``, TCP's PSH): a batch driver that KNOWS its round
+        of submissions is complete conveys exactly the information the
+        quiescence timer would otherwise have to infer -- but unlike a
+        manual ``drain()`` the caller never blocks and never executes
+        kernels.  No-op under ``policy="manual"`` or with nothing pending.
+        """
+        with self._wakeup:
+            if self.policy == "manual" or not self._pending:
+                return
+            # Flag, not just a notify: if the drive loop is mid-evaluation
+            # (not waiting) the notification would be lost and the flush
+            # would slip a full tick.
+            self._flush_requested = True
+            self._wakeup.notify_all()
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the background drive loop (if any); optionally flush first.
+
+        Safe to call multiple times.  After closing, ``submit`` raises."""
+        with self._wakeup:
+            self._closed = True
+            driver, self._driver = self._driver, None
+            self._wakeup.notify_all()
+        if driver is not None:
+            driver.join(timeout=60.0)
+        if drain:
+            self.drain()
+
+    def __enter__(self) -> "CobiFarm":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def prewarm(
+        self,
+        *,
+        reads: Sequence[int] = (8,),
+        steps: int = 400,
+        dt: float = 0.35,
+        ks_max: float = 1.2,
+        max_bins: Optional[int] = None,
+        max_slots: Optional[int] = None,
+        reduce: str = "best",
+    ) -> int:
+        """Compile the drain kernels over the reachable launch-shape lattice.
+
+        Background drain policies launch timing-dependent SUBSETS of the
+        queue, so the batched kernels see a traffic-dependent set of
+        (batch-pad, slot-pad, replica-tier) shapes; compiling one of those
+        at serve time puts a multi-second XLA stall in the middle of a
+        drain.  This is the farm's analogue of the batch-bucket warmup
+        sweep a production model server runs at startup: one tiny launch
+        per lattice point (zero coefficients -- shapes are all that
+        matter), so every later drain hits a warm jit cache.  Returns the
+        number of launches.  Size the lattice from expected traffic:
+        ``max_bins`` ~ peak pending lanes / ``lanes_per_chip``,
+        ``max_slots`` ~ the most jobs that share one bin.
+        """
+        L = self.lanes_per_chip
+        max_bins = 2 * self.n_chips if max_bins is None else max_bins
+        max_slots = 2 * ops.SLOT_PAD if max_slots is None else max_slots
+        b_pads = sorted({_batch_pad(b) for b in range(1, max_bins + 1)})
+        s_pads = sorted({
+            bucket_to(s, ops.SLOT_PAD)
+            for s in range(1, max_slots + 1)
+        })
+        r_tiers = sorted({bucket_to(max(int(r), 1), REPLICA_BUCKET)
+                          for r in reads})
+        launches = 0
+        for r in r_tiers:
+            k_pad = REPLICA_BUCKET
+            while True:  # power-of-two key-count lattice of _run_group
+                jax.block_until_ready(_phi0_from_keys(
+                    jnp.stack([jax.random.key(0)] * k_pad), r=r, lanes=L
+                ))
+                launches += 1
+                if k_pad >= b_pads[-1] * s_pads[-1]:
+                    break
+                k_pad *= 2
+            for b in b_pads:
+                jp = jnp.zeros((b, L, L), jnp.float32)
+                hp = jnp.zeros((b, L), jnp.float32)
+                phi0 = jnp.zeros((b, r, L), jnp.float32)
+                if reduce == "best":
+                    for s in s_pads:
+                        mask = jnp.zeros((b, L, s), jnp.float32)
+                        budgets = jnp.ones((b, s), jnp.float32)
+                        jax.block_until_ready(ops.cobi_anneal_packed_best(
+                            jp, hp, jp, hp, mask, budgets, phi0,
+                            steps=steps, dt=dt, ks_max=ks_max, impl=self.impl,
+                        ))
+                        launches += 1
+                else:
+                    jax.block_until_ready(ops.cobi_trajectory_batch(
+                        jp, hp, phi0, steps=steps, dt=dt, ks_max=ks_max,
+                        impl=self.impl,
+                    ))
+                    launches += 1
+        return launches
 
     def clear_completed(self) -> None:
         """Drop results/receipts of completed jobs (chip stats are kept).
@@ -261,25 +619,189 @@ class CobiFarm:
         long-lived farm (the serving engine) call this once per batch after
         consuming every future, so sustained load stays memory-bounded.
         """
-        self._results.clear()
-        self._receipts.clear()
-        pending_ids = {j.job_id for j in self._pending}
-        self._jobs = {jid: j for jid, j in self._jobs.items() if jid in pending_ids}
+        with self._lock:
+            self._results.clear()
+            self._receipts.clear()
+            self._errors.clear()
+            pending_ids = {j.job_id for j in self._pending}
+            self._jobs = {
+                jid: j for jid, j in self._jobs.items() if jid in pending_ids
+            }
 
     def stats(self) -> FarmStats:
-        return FarmStats(
-            jobs_completed=len(self._results),
-            super_instances=sum(c.solves for c in self._chips),
-            drains=self._drains,
-            sim_seconds=self._sim_time,
-            energy_joules=sum(c.busy_seconds for c in self._chips)
-            * self.hardware.solver_power_w,
-            chips=list(self._chips),
-            bytes_h2d=self._bytes_h2d,
-            bytes_d2h=self._bytes_d2h,
-        )
+        with self._lock:
+            return FarmStats(
+                jobs_completed=len(self._results),
+                super_instances=sum(c.solves for c in self._chips),
+                drains=self._drains,
+                sim_seconds=self._sim_time,
+                energy_joules=sum(c.busy_seconds for c in self._chips)
+                * self.hardware.solver_power_w,
+                chips=list(self._chips),
+                bytes_h2d=self._bytes_h2d,
+                bytes_d2h=self._bytes_d2h,
+            )
+
+    def pending_jobs(self) -> int:
+        with self._lock:
+            return len(self._pending)
 
     # ------------------------------------------------------------ internals
+
+    def _raise_job_error(self, job_id: int) -> None:
+        with self._lock:
+            exc = self._errors.get(job_id)
+        if exc is not None:
+            raise exc
+
+    def _take(self, job_id: int, table: Dict[int, object]):
+        with self._lock:
+            try:
+                return table[job_id]
+            except KeyError:
+                raise KeyError(
+                    f"farm job {job_id} was cleared (clear_completed); its "
+                    f"future is no longer readable"
+                ) from None
+
+    def _drive_loop(self) -> None:
+        """Background drain driver (daemon thread, non-manual policies).
+
+        Woken by every submission and at least every ``_tick`` seconds;
+        evaluates the policy trigger under the state lock, then executes due
+        drains under the execution lock only -- submitters never wait on a
+        running kernel.
+        """
+        while True:
+            with self._wakeup:
+                if self._closed:
+                    return
+                self._wakeup.wait(self._tick)
+                if self._closed:
+                    return
+            with self._exec_lock:
+                with self._lock:
+                    due = self._due_locked(time.monotonic())
+                if due:
+                    try:
+                        self._execute(due)
+                    except Exception:  # noqa: BLE001
+                        # The affected futures were already failed by
+                        # _execute; the drive loop itself must outlive any
+                        # single bad drain or every later job wedges silently.
+                        traceback.print_exc()
+
+    def _due_locked(self, now: float) -> List[FarmJob]:
+        """Select (and dequeue) the jobs the drain policy says are due."""
+        if not self._pending:
+            self._flush_requested = False
+            return []
+        if self._flush_requested:
+            self._flush_requested = False
+            due, self._pending = self._pending, []
+            return due
+        if self.policy == "timer":
+            if now - self._last_drain >= self.timer_interval:
+                due, self._pending = self._pending, []
+                return due
+            return []
+        # bin-full / deadline: quiescence fallback -- nothing new arrived for
+        # `linger` seconds, so waiting longer cannot improve packing.
+        since_submit = now - self._last_submit
+        if since_submit >= self.linger:
+            due, self._pending = self._pending, []
+            return due
+        due_ids: set = set()
+        groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
+        for job in self._pending:
+            gkey = (job.steps, job.dt, job.ks_max, job.reduce)
+            groups.setdefault(gkey, []).append(job)
+        for gkey, jobs in groups.items():
+            tiers = replica_tiers(
+                [j.reads for j in jobs],
+                bucket=REPLICA_BUCKET, ratio=REPLICA_TIER_RATIO,
+            )
+            for tier_reads, idxs in tiers:
+                tier_jobs = [jobs[i] for i in idxs]
+                est = estimate_packing(
+                    [j.ising.n for j in tier_jobs], self.lanes_per_chip
+                )
+                if self.policy == "bin-full":
+                    # While a burst is still arriving (queue not yet still
+                    # for `_debounce`), launch only FULL chip cycles of
+                    # closed bins -- constant launch width keeps background
+                    # drains on one jit shape instead of discovering a new
+                    # (batch, slot) pad combination per timing-dependent
+                    # queue snapshot.  Once the queue goes briefly still,
+                    # whatever is closed launches (low traffic must not wait
+                    # out the full linger); partial bins always do.
+                    closed = est.closed_bins(self.bin_full_target)
+                    if closed and (len(closed) >= self.bin_full_min_bins
+                                   or since_submit >= self._debounce):
+                        for b in closed[: self.bin_full_min_bins]:
+                            due_ids.update(
+                                tier_jobs[i].job_id for i in est.bins[b]
+                            )
+                else:  # deadline
+                    bin_seconds = tier_reads * self.hardware.seconds_per_solve
+                    latency = math.ceil(est.n_bins / self.n_chips) * bin_seconds
+                    urgent = any(
+                        j.deadline is not None
+                        and j.deadline - self._sim_time - latency
+                        <= self.deadline_watermark
+                        for j in tier_jobs
+                    )
+                    if urgent:
+                        # The whole tier rides along: binmates cost nothing
+                        # extra (the urgent job's bin runs regardless).
+                        due_ids.update(j.job_id for j in tier_jobs)
+        if not due_ids:
+            return []
+        due = [j for j in self._pending if j.job_id in due_ids]
+        self._pending = [j for j in self._pending if j.job_id not in due_ids]
+        return due
+
+    def _execute(self, pending: List[FarmJob]) -> int:
+        """Group, pack and execute ``pending``; caller holds the EXECUTION
+        lock (not the state lock -- launches run concurrently with
+        submissions, and each group commits its results under the state
+        lock as it finishes)."""
+        with self._lock:
+            # Counted up front: a future resolving (per-group commit) must
+            # never be observable before the drain that produced it.
+            self._drains += 1
+            self._last_drain = time.monotonic()
+        groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
+        for job in pending:
+            gkey = (job.steps, job.dt, job.ks_max, job.reduce)
+            groups.setdefault(gkey, []).append(job)
+        first_exc: Optional[BaseException] = None
+        for gkey in sorted(groups):
+            jobs = groups[gkey]
+            tiers = replica_tiers(
+                [j.reads for j in jobs],
+                bucket=REPLICA_BUCKET, ratio=REPLICA_TIER_RATIO,
+            )
+            for tier_reads, idxs in tiers:
+                tier_jobs = [jobs[i] for i in idxs]
+                try:
+                    self._run_group(tier_reads, gkey, tier_jobs)
+                except Exception as exc:  # noqa: BLE001 -- must not strand futures
+                    # Fail THIS group's futures (waiters see the original
+                    # error instead of hanging forever) and keep executing
+                    # the other groups; re-raised below so a manual drain's
+                    # caller still sees it, while the drive loop survives.
+                    with self._lock:
+                        for job in tier_jobs:
+                            self._errors[job.job_id] = exc
+                            future = self._futures.pop(job.job_id, None)
+                            if future is not None:
+                                future._finish()
+                    if first_exc is None:
+                        first_exc = exc
+        if first_exc is not None:
+            raise first_exc
+        return len(pending)
 
     def _run_group(
         self, r_tier: int, gkey: Tuple[int, float, float, str], jobs: List[FarmJob]
@@ -298,7 +820,7 @@ class CobiFarm:
         by_id = {j.job_id: j for j in jobs}
 
         b_real = len(bins)
-        b_pad = bucket_to(b_real, BATCH_BUCKET)
+        b_pad = _batch_pad(b_real)
         L = self.lanes_per_chip
         slots = [(b, si, slot) for b, inst in enumerate(bins)
                  for si, slot in enumerate(inst.slots)]
@@ -309,17 +831,24 @@ class CobiFarm:
             hp[b] = inst.h_scaled
             jp[b] = inst.j_scaled
         # Per-job phases from the job's own key -- results are reproducible
-        # regardless of binmates or tier: each job draws at its OWN bucketed
-        # read count (rows past it are inert: zero-phase anneals excluded by
-        # the read budget / slicing).  One launch per distinct bucket (key
-        # count bucketed to keep the jit cache small).
+        # regardless of binmates, tier, or WHICH drain the job landed in
+        # (manual vs any background policy): each job draws at its OWN
+        # bucketed read count (rows past it are inert: zero-phase anneals
+        # excluded by the read budget / slicing).  One launch per distinct
+        # bucket (key count bucketed to keep the jit cache small).
         by_rj: Dict[int, List[int]] = {}
         for idx, (b, si, slot) in enumerate(slots):
             rj = bucket_to(max(by_id[slot.job_id].reads, 1), REPLICA_BUCKET)
             by_rj.setdefault(rj, []).append(idx)
         for rj, idxs in sorted(by_rj.items()):
             keys = [by_id[slots[i][2].job_id].key for i in idxs]
-            k_pad = bucket_to(len(keys), REPLICA_BUCKET)
+            # Power-of-two key-count bucket: each row's draw depends only on
+            # its own key, so padding is inert, and background drains (whose
+            # job counts are timing-dependent) stay within a handful of jit
+            # shapes instead of one per distinct count.
+            k_pad = REPLICA_BUCKET
+            while k_pad < len(keys):
+                k_pad *= 2
             keys += [jax.random.key(0)] * (k_pad - len(keys))
             draws = np.asarray(_phi0_from_keys(jnp.stack(keys), r=rj, lanes=L))
             for pos, i in enumerate(idxs):
@@ -329,15 +858,29 @@ class CobiFarm:
                 )
 
         if reduce == "best":
-            self._execute_fused(bins, slots, by_id, hp, jp, phi0,
-                                steps=steps, dt=dt, ks_max=ks_max)
+            results, h2d, d2h = self._execute_fused(
+                bins, slots, by_id, hp, jp, phi0,
+                steps=steps, dt=dt, ks_max=ks_max)
         else:
-            self._execute_full(bins, slots, by_id, hp, jp, phi0,
-                               steps=steps, dt=dt, ks_max=ks_max)
-        self._account(bins, slots, by_id, r_tier)
+            results, h2d, d2h = self._execute_full(
+                bins, slots, by_id, hp, jp, phi0,
+                steps=steps, dt=dt, ks_max=ks_max)
+        with self._lock:
+            self._bytes_h2d += h2d
+            self._bytes_d2h += d2h
+            self._results.update(results)
+            self._account(bins, slots, by_id, r_tier)
+            # Results AND receipts are stored: resolve the futures (fires
+            # done-callbacks from this -- possibly background -- thread).
+            for _, _, slot in slots:
+                future = self._futures.pop(slot.job_id, None)
+                if future is not None:
+                    future._finish()
 
     def _execute_fused(self, bins, slots, by_id, hp, jp, phi0, *, steps, dt, ks_max):
-        """Fused drain: ONE launch; per-job winners come back, nothing else."""
+        """Fused drain: ONE launch; per-job winners come back, nothing else.
+        Runs without the state lock; returns (results, bytes_h2d, bytes_d2h)
+        for the caller to commit."""
         b_pad, _, L = phi0.shape
         s_pad = bucket_to(max(len(inst.slots) for inst in bins), ops.SLOT_PAD)
         hu = np.zeros((b_pad, L), np.float32)
@@ -350,8 +893,8 @@ class CobiFarm:
             for si, slot in enumerate(inst.slots):
                 mask[b, slot.offset : slot.offset + slot.n, si] = 1.0
                 reads[b, si] = max(by_id[slot.job_id].reads, 1)
-        self._bytes_h2d += (jp.nbytes + hp.nbytes + ju.nbytes + hu.nbytes
-                            + mask.nbytes + reads.nbytes + phi0.nbytes)
+        h2d = (jp.nbytes + hp.nbytes + ju.nbytes + hu.nbytes
+               + mask.nbytes + reads.nbytes + phi0.nbytes)
         best_e, best_s = ops.cobi_anneal_packed_best(
             jnp.asarray(jp), jnp.asarray(hp), jnp.asarray(ju), jnp.asarray(hu),
             jnp.asarray(mask), jnp.asarray(reads), jnp.asarray(phi0),
@@ -359,23 +902,25 @@ class CobiFarm:
         )
         best_e = np.asarray(best_e)  # (B, S) f32
         best_s = np.asarray(best_s)  # (B, S, L) int8
-        self._bytes_d2h += best_e.nbytes + best_s.nbytes
+        results = {}
         for b, si, slot in slots:
-            self._results[slot.job_id] = SolverResult(
+            results[slot.job_id] = SolverResult(
                 spins=best_s[b, si : si + 1, slot.offset : slot.offset + slot.n].copy(),
                 energies=best_e[b, si : si + 1].copy(),
             )
+        return results, h2d, best_e.nbytes + best_s.nbytes
 
     def _execute_full(self, bins, slots, by_id, hp, jp, phi0, *, steps, dt, ks_max):
         """Legacy two-launch drain: full trajectories, separate re-scoring;
-        every read of every job comes back to the host."""
-        self._bytes_h2d += jp.nbytes + hp.nbytes + phi0.nbytes
+        every read of every job comes back to the host.  Runs without the
+        state lock; returns (results, bytes_h2d, bytes_d2h) to commit."""
+        h2d = jp.nbytes + hp.nbytes + phi0.nbytes
         phi = ops.cobi_trajectory_batch(
             jnp.asarray(jp), jnp.asarray(hp), jnp.asarray(phi0),
             steps=steps, dt=dt, ks_max=ks_max, impl=self.impl,
         )
         spins_packed = np.asarray(kref.ref_cobi_spins(phi))  # (B, R, L) int8
-        self._bytes_d2h += spins_packed.nbytes
+        d2h = spins_packed.nbytes
 
         # One batched energy launch scores every job against its ORIGINAL
         # (h, J); per-job spins sit at lane offset 0, exactly like the solo
@@ -394,27 +939,29 @@ class CobiFarm:
             s_stack[k, :, : slot.n] = spins_packed[b, :, slot.offset : slot.offset + slot.n]
             h_stack[k, : slot.n] = np.asarray(job.ising.h, np.float32)
             j_stack[k, : slot.n, : slot.n] = np.asarray(job.ising.j, np.float32)
-        self._bytes_h2d += s_stack.nbytes + h_stack.nbytes + j_stack.nbytes
+        h2d += s_stack.nbytes + h_stack.nbytes + j_stack.nbytes
         energies = np.asarray(
             ops.ising_energy(
                 jnp.asarray(s_stack), jnp.asarray(h_stack), jnp.asarray(j_stack),
                 impl=self.impl,
             )
         )  # (n_jobs, r_tier)
-        self._bytes_d2h += energies.nbytes
+        d2h += energies.nbytes
 
+        results = {}
         for k, (b, _, slot) in enumerate(slots):
             job = by_id[slot.job_id]
             # Host arrays: the reduce that consumes these is numpy, and 100s
             # of per-job device_puts were measurable at farm throughput.
             # Copies, not views -- a view would pin the whole packed batch
             # in memory for as long as the result is retained.
-            self._results[job.job_id] = SolverResult(
+            results[job.job_id] = SolverResult(
                 spins=spins_packed[
                     b, : job.reads, slot.offset : slot.offset + slot.n
                 ].copy(),
                 energies=energies[k, : job.reads].copy(),
             )
+        return results, h2d, d2h
 
     def _account(self, bins, slots, by_id, r_tier: int):
         """Simulated hardware accounting: bins round-robin over chips, each
@@ -456,8 +1003,9 @@ class CobiFarm:
 @functools.partial(jax.jit, static_argnames=("r", "lanes"))
 def _phi0_from_keys(keys: Array, *, r: int, lanes: int) -> Array:
     """(K,) keys -> (K, r, lanes) uniform phases; job k uses [:, :n_k]."""
-    draw = lambda k: jax.random.uniform(k, (r, lanes), jnp.float32, 0.0, 2.0 * jnp.pi)
-    return jax.vmap(draw)(keys)
+    return jax.vmap(
+        lambda k: jax.random.uniform(k, (r, lanes), jnp.float32, 0.0, 2.0 * jnp.pi)
+    )(keys)
 
 
 def solve_many(
@@ -472,13 +1020,20 @@ def solve_many(
     impl: str = "auto",
     check: bool = True,
     reduce: str = "none",
+    policy: str = "manual",
 ) -> List[SolverResult]:
-    """One-shot convenience: pack + solve a list of instances on a fresh farm."""
-    farm = CobiFarm(n_chips, impl=impl, check=check)
-    futures = [
-        farm.submit(ising, key, reads=reads, steps=steps, dt=dt, ks_max=ks_max,
-                    reduce=reduce)
-        for ising, key in zip(instances, keys)
-    ]
-    farm.drain()
-    return [f.result() for f in futures]
+    """One-shot convenience: pack + solve a list of instances on a fresh farm.
+
+    ``policy`` selects the drain policy; with the default ``"manual"`` one
+    explicit drain flushes everything, with any background policy the futures
+    resolve on their own and are simply awaited (results are bit-identical
+    either way -- only accounting differs)."""
+    with CobiFarm(n_chips, impl=impl, check=check, policy=policy) as farm:
+        futures = [
+            farm.submit(ising, key, reads=reads, steps=steps, dt=dt, ks_max=ks_max,
+                        reduce=reduce)
+            for ising, key in zip(instances, keys)
+        ]
+        if policy == "manual":
+            farm.drain()
+        return [f.result(timeout=600.0) for f in futures]

@@ -7,7 +7,7 @@ share: the dry-run lowers exactly the functions production runs.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

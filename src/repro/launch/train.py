@@ -18,7 +18,7 @@ import jax
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticTextTask
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_train_step, step_shardings
+from repro.launch.steps import make_train_step
 from repro.models import init_params
 from repro.train import optimizer as opt
 from repro.train.loop import LoopConfig, train

@@ -15,8 +15,7 @@ Entry points (all pure):
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

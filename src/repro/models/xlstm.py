@@ -9,7 +9,6 @@ same chunked recurrence as Mamba2 (exact, not approximated).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,12 +5,19 @@ Request -> sentence split -> embed (backbone or hashed BoW) -> improved Ising
 selected solver (COBI sim by default) -> M-sentence summary.
 
 For the COBI solver the engine is genuinely batched end-to-end: every
-request is a generator that submits its anneal jobs (all stochastic-rounding
-iterations of the current decomposition window) to a shared
-:class:`repro.farm.CobiFarm` and yields; the engine drives all requests in
-lockstep, draining the farm ONCE per round so jobs from different requests
-are packed onto the same virtual chips and annealed by one batched Pallas
-launch.  Jobs go in with ``reduce="best"``: the fused
+request is a generator that submits its anneal jobs (ALL planned
+decomposition windows of the request, speculated ahead by the pipelined
+window planner) to a shared :class:`repro.farm.CobiFarm` and yields; the
+engine drives all requests in lockstep.  Under the farm's default
+``policy="manual"`` the engine supplies the round barrier, draining the farm
+ONCE per round so jobs from different requests are packed onto the same
+virtual chips and annealed by one batched Pallas launch.  Under a background
+drain policy (``policy="bin-full"``/``"deadline"``/``"timer"``) the engine
+stops draining entirely: the farm's drive loop fires drains as bins fill /
+deadlines approach / the timer ticks, and the request generators simply
+block on their futures.  Results are bit-identical across policies.
+
+Jobs go in with ``reduce="best"``: the fused
 anneal→readout→best-of epilogue selects each iteration's winning read ON
 DEVICE, so a drain ships O(lanes) per super-instance back to the engine
 instead of every replica's spins.  Per-request latency/energy come from the
@@ -42,6 +49,9 @@ class SummarizeRequest:
     m: int = 6
     request_id: int = 0
     priority: int = 0
+    # Absolute simulated-clock deadline stamped on the request's farm jobs;
+    # the farm's policy="deadline" watermark trigger keys on it.
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -67,10 +77,15 @@ class SummarizationEngine:
         score_against_exact: bool = False,
         farm: Optional[CobiFarm] = None,
         n_chips: int = 4,
+        policy: str = "manual",
     ):
         """``farm`` injects a shared chip farm; by default a fresh
-        ``CobiFarm(n_chips)`` is built for the COBI solver.  ``n_chips=0``
-        disables the farm (legacy sequential per-request solving)."""
+        ``CobiFarm(n_chips, policy=policy)`` is built for the COBI solver.
+        ``n_chips=0`` disables the farm (legacy sequential per-request
+        solving).  A non-manual ``policy`` makes the farm self-draining:
+        the engine never calls ``drain()`` and futures resolve from the
+        farm's background drive loop (tune linger/timer knobs by injecting
+        a pre-built farm)."""
         self.cfg = solve_cfg or SolveConfig(
             solver="cobi", iterations=6, reads=8, int_range=14
         )
@@ -78,17 +93,23 @@ class SummarizationEngine:
         self.lam = lam
         self.score = score_against_exact
         if farm is None and n_chips > 0 and self.cfg.solver == "cobi":
-            farm = CobiFarm(n_chips)
+            farm = CobiFarm(n_chips, policy=policy)
         self.farm = farm
         self._counter = 0
 
     def _hardware(self):
         return COBI if self.cfg.solver == "cobi" else TABU_CPU
 
-    def submit(self, text: str, m: int = 6, priority: int = 0) -> SummarizeRequest:
+    def submit(self, text: str, m: int = 6, priority: int = 0,
+               deadline: Optional[float] = None) -> SummarizeRequest:
         self._counter += 1
         return SummarizeRequest(text=text, m=m, request_id=self._counter,
-                                priority=priority)
+                                priority=priority, deadline=deadline)
+
+    def close(self) -> None:
+        """Stop the farm's background drive loop (no-op without a farm)."""
+        if self.farm is not None:
+            self.farm.close()
 
     def run_batch(self, requests: Sequence[SummarizeRequest], seed: int = 0
                   ) -> List[SummarizeResponse]:
@@ -112,7 +133,16 @@ class SummarizationEngine:
                     except StopIteration as done:
                         responses[i] = done.value
                 if still_running and self.farm is not None:
-                    self.farm.drain()
+                    if self.farm.policy == "manual":
+                        # Manual policy: the engine IS the round barrier.
+                        self.farm.drain()
+                    else:
+                        # Background policies: the farm drains itself;
+                        # the engine only tells it this round's burst is
+                        # over (non-blocking -- the drive loop flushes
+                        # while the resumed generators reduce), and the
+                        # generators block on their futures.
+                        self.farm.flush_hint()
                 drivers = still_running
         finally:
             if self.farm is not None:
@@ -128,7 +158,7 @@ class SummarizationEngine:
                 next(gen)
             except StopIteration as done:
                 return done.value
-            if self.farm is not None:
+            if self.farm is not None and self.farm.policy == "manual":
                 self.farm.drain()
 
     def _iter_one(self, req: SummarizeRequest, key):
@@ -147,7 +177,8 @@ class SummarizationEngine:
             cfg = dataclasses.replace(cfg, decompose=True)
         if self.farm is not None and cfg.solver == "cobi":
             report = yield from iter_solve_es(
-                problem, key, cfg, farm=self.farm, priority=req.priority
+                problem, key, cfg, farm=self.farm, priority=req.priority,
+                deadline=req.deadline,
             )
         else:
             report = solve_es(problem, key, cfg)

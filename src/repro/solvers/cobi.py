@@ -84,18 +84,23 @@ def solve_batch(
     impl: str = "auto",
     check: bool = True,
     reduce: str = "none",
+    policy: str = "manual",
 ) -> "list[SolverResult]":
     """Solve many instances at once on a virtual chip farm.
 
     Block-diagonally packs the instances onto ``n_chips`` simulated COBI
     chips and anneals them in one batched kernel launch (see ``repro.farm``);
     results are per-instance and bit-identical to what each instance would
-    get from the farm alone.  For scheduling control (priorities, deadlines,
-    streaming submission) use ``repro.farm.CobiFarm`` directly.
+    get from the farm alone.  ``policy`` selects the farm's drain policy
+    (any background policy resolves the futures without an explicit drain;
+    results are bit-identical to ``"manual"``).  For scheduling control
+    (priorities, deadlines, streaming submission, ``await``-able futures)
+    use ``repro.farm.CobiFarm`` directly.
     """
     from repro.farm import solve_many  # farm imports this module; lazy import
 
     return solve_many(
         instances, keys, n_chips=n_chips, reads=reads, steps=steps,
         dt=dt, ks_max=ks_max, impl=impl, check=check, reduce=reduce,
+        policy=policy,
     )

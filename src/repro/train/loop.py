@@ -20,11 +20,8 @@ import time
 from pathlib import Path
 from typing import Callable, Optional
 
-import jax
-import numpy as np
 
 from repro.train import checkpoint as ckpt
-from repro.train import optimizer as opt_mod
 
 
 @dataclasses.dataclass

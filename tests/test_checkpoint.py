@@ -1,7 +1,6 @@
 """Checkpoint manager: atomic save/restore, resume equivalence, elastic
 reload, corruption resistance."""
 
-import json
 from pathlib import Path
 
 import jax

@@ -1,14 +1,13 @@
 """Data pipeline determinism + serving engine end-to-end."""
 
 import numpy as np
-import pytest
 
 from repro.core import SolveConfig
 from repro.data.pipeline import DataConfig, SyntheticTextTask
 from repro.data.synthetic import synthetic_document
 from repro.data.text import split_sentences
 from repro.data.tokenizer import ByteTokenizer
-from repro.embeddings import HashedBowEncoder, problem_from_sentences
+from repro.embeddings import HashedBowEncoder
 from repro.serving import SummarizationEngine
 
 

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import SolveConfig, solve_es
 from repro.core.decomposition import decompose_solve, window_indices
-from repro.core.pipeline import make_subsolver
 from repro.data.synthetic import synthetic_benchmark
 from repro.solvers import brute
 

@@ -11,7 +11,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.launch import steps as S
 
 

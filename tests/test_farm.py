@@ -8,7 +8,13 @@ import numpy as np
 import pytest
 
 from repro.core.formulation import IsingProblem
-from repro.farm import BATCH_BUCKET, CobiFarm, pack_instances, solve_many
+from repro.farm import (
+    BATCH_BUCKET,
+    CobiFarm,
+    FarmPendingError,
+    pack_instances,
+    solve_many,
+)
 from repro.kernels import ops
 from repro.solvers.cobi import COBI_MAX_SPINS
 
@@ -180,12 +186,19 @@ def test_incompatible_schedules_run_in_separate_groups():
     assert farm.stats().super_instances == 2  # schedules cannot share a pack
 
 
-def test_future_result_lazily_drains():
+def test_future_result_requires_drain_under_manual():
+    """Manual policy: result() on a queued job raises a clear FarmPendingError
+    naming the policy (nothing in the background will ever run it) instead of
+    the old silent implicit drain / a generic KeyError."""
     farm = CobiFarm(1)
     fut = farm.submit(_instance(2, 16), jax.random.key(2), reads=8, steps=60)
     assert not fut.done()
-    res = fut.result()  # implicit drain
-    assert fut.done() and res.energies.shape == (8,)
+    with pytest.raises(FarmPendingError, match="manual"):
+        fut.result()
+    with pytest.raises(FarmPendingError, match="drain"):
+        fut.receipt()
+    farm.drain()
+    assert fut.done() and fut.result().energies.shape == (8,)
 
 
 def test_chip_occupancy_and_energy_accounting():

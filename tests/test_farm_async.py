@@ -1,0 +1,376 @@
+"""Async farm serving: drain policies, awaitable futures, pipelined windows.
+
+Policy equivalence is the load-bearing invariant: WHICH drain a job lands in
+(manual round barrier, a closed bin, a deadline watermark, a timer tick) may
+change accounting, but never spins or energies -- phi0 is drawn from the
+job's own key at its own bucketed read count, and packed blocks do not
+interact.  Everything else here exercises the serving surface: background
+drive loops resolving futures with no caller-side ``drain()``, asyncio
+``gather`` over ``FarmFuture``s, ``FarmPendingError`` semantics, done
+callbacks, and the speculative decomposition-window pipeline.
+"""
+
+import asyncio
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SolveConfig, solve_es
+from repro.core.decomposition import (
+    PipelinedDecomposition,
+    decompose_solve,
+    guess_top_mu,
+)
+from repro.core.formulation import IsingProblem
+from repro.data.synthetic import synthetic_benchmark, synthetic_document
+from repro.farm import (
+    CobiFarm,
+    FarmJobCancelled,
+    FarmPendingError,
+    estimate_packing,
+    solve_many,
+)
+from repro.serving import SummarizationEngine
+
+
+def _instance(seed, n):
+    kh, kj = jax.random.split(jax.random.key(seed))
+    h = jax.random.randint(kh, (n,), -14, 15).astype(jnp.float32)
+    j = jax.random.randint(kj, (n, n), -14, 15).astype(jnp.float32)
+    j = jnp.triu(j, 1)
+    return IsingProblem(h=h, j=j + j.T)
+
+
+def _mixed_jobs():
+    """Sizes spanning bins, read counts spanning two tiers, both reduces."""
+    sizes = [12, 30, 45, 59, 20, 26]
+    reads = [8, 6, 8, 48, 48, 8]
+    reduces = ["none", "best", "none", "best", "none", "best"]
+    probs = [_instance(40 + i, n) for i, n in enumerate(sizes)]
+    keys = [jax.random.fold_in(jax.random.key(17), i) for i in range(len(sizes))]
+    return probs, keys, reads, reduces
+
+
+def _submit_all(farm, jobs):
+    probs, keys, reads, reduces = jobs
+    return [
+        farm.submit(p, k, reads=r, steps=80, reduce=red)
+        for p, k, r, red in zip(probs, keys, reads, reduces)
+    ]
+
+
+@pytest.fixture(scope="module")
+def manual_results():
+    farm = CobiFarm(2)
+    futs = _submit_all(farm, _mixed_jobs())
+    farm.drain()
+    return [f.result() for f in futs]
+
+
+# ------------------------------------------------------------ equivalence
+
+
+@pytest.mark.parametrize("policy", ["bin-full", "timer", "deadline"])
+def test_policy_results_bit_identical_to_manual(policy, manual_results):
+    """No caller-side drain at all: the background loop resolves every
+    future, and spins/energies match the manual round barrier bit for bit."""
+    with CobiFarm(2, policy=policy, linger=0.01, timer_interval=0.01) as farm:
+        futs = _submit_all(farm, _mixed_jobs())
+        results = [f.result(timeout=60.0) for f in futs]
+        assert farm.stats().drains >= 1
+    for ref, got in zip(manual_results, results):
+        np.testing.assert_array_equal(np.asarray(ref.spins), np.asarray(got.spins))
+        np.testing.assert_array_equal(
+            np.asarray(ref.energies), np.asarray(got.energies)
+        )
+
+
+def test_solve_many_policy_matches_manual(manual_results):
+    probs, keys, _, _ = _mixed_jobs()
+    a = solve_many(probs, keys, n_chips=2, reads=8, steps=80)
+    b = solve_many(probs, keys, n_chips=2, reads=8, steps=80, policy="timer")
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(ra.spins), np.asarray(rb.spins))
+        np.testing.assert_array_equal(
+            np.asarray(ra.energies), np.asarray(rb.energies)
+        )
+
+
+# ------------------------------------------------------------ bin-full
+
+
+def test_bin_full_drains_closed_bin_and_leaves_partial():
+    """Two 59-spin jobs close a 128-lane bin (0.92 >= 0.9 target) and drain
+    in the background; a third lone job stays queued until an explicit flush
+    (linger is set far beyond the test horizon)."""
+    farm = CobiFarm(1, policy="bin-full", linger=30.0, bin_full_target=0.9)
+    f1 = farm.submit(_instance(1, 59), jax.random.key(1), reads=8, steps=60)
+    f2 = farm.submit(_instance(2, 59), jax.random.key(2), reads=8, steps=60)
+    f3 = farm.submit(_instance(3, 20), jax.random.key(3), reads=8, steps=60)
+    f1.result(timeout=60.0)
+    f2.result(timeout=60.0)
+    assert not f3.done()
+    assert farm.pending_jobs() == 1
+    farm.close()  # flushes the leftover
+    assert f3.done() and f3.result().spins.shape == (8, 20)
+
+
+def test_bin_full_estimate_matches_trigger_geometry():
+    est = estimate_packing([59, 59, 20], 128)
+    occ = est.occupancies
+    assert est.n_bins == 2
+    assert occ[0] == pytest.approx(118 / 128)
+    assert est.closed_bins(0.9) == [0]
+    assert sorted(est.bins[0]) == [0, 1]
+
+
+# ------------------------------------------------------------ deadline
+
+
+def test_deadline_policy_honors_watermark():
+    """A far-deadline job alone does not trigger; a tight-deadline arrival
+    drains the tier (both jobs ride along) well before linger, and the bin
+    completes within the tight job's deadline on the simulated clock."""
+    farm = CobiFarm(1, policy="deadline", linger=30.0, deadline_watermark=0.005)
+    hw = farm.hardware
+    f_far = farm.submit(_instance(5, 30), jax.random.key(5), reads=8, steps=60,
+                        deadline=100.0)
+    time.sleep(0.08)  # several drive-loop ticks: far deadline must NOT fire
+    assert not f_far.done()
+    tight = 8 * hw.seconds_per_solve + 0.004  # inside watermark+latency est
+    f_tight = farm.submit(_instance(6, 30), jax.random.key(6), reads=8,
+                          steps=60, deadline=tight)
+    r_tight = f_tight.receipt(timeout=60.0)
+    assert f_far.done()  # same tier rode along
+    assert r_tight.sim_latency_seconds <= tight
+    farm.close()
+
+
+# ------------------------------------------------------------ asyncio
+
+
+def test_asyncio_gather_resolves_without_drain(manual_results):
+    """The acceptance-criterion smoke test: ``asyncio.gather`` over
+    FarmFutures under bin-full and timer policies, zero ``drain()`` calls,
+    results bit-identical to manual."""
+
+    async def serve(policy):
+        with CobiFarm(2, policy=policy, linger=0.01,
+                      timer_interval=0.01) as farm:
+            futs = _submit_all(farm, _mixed_jobs())
+            return await asyncio.gather(*futs)
+
+    for policy in ("bin-full", "timer"):
+        results = asyncio.run(serve(policy))
+        for ref, got in zip(manual_results, results):
+            np.testing.assert_array_equal(
+                np.asarray(ref.spins), np.asarray(got.spins)
+            )
+
+
+def test_await_under_manual_raises_pending():
+    async def attempt():
+        farm = CobiFarm(1)
+        fut = farm.submit(_instance(8, 16), jax.random.key(8), reads=8, steps=60)
+        return await fut
+
+    with pytest.raises(FarmPendingError, match="manual"):
+        asyncio.run(attempt())
+
+
+# ---------------------------------------------------- futures / callbacks
+
+
+def test_result_timeout_raises():
+    farm = CobiFarm(1, policy="timer", timer_interval=30.0)
+    fut = farm.submit(_instance(9, 16), jax.random.key(9), reads=8, steps=60)
+    with pytest.raises(TimeoutError, match="timer"):
+        fut.result(timeout=0.05)
+    farm.close()  # flush resolves it after all
+    assert fut.done()
+
+
+def test_add_done_callback_before_and_after_completion():
+    farm = CobiFarm(1)
+    fut = farm.submit(_instance(10, 16), jax.random.key(10), reads=8, steps=60)
+    seen = []
+    fut.add_done_callback(lambda f: seen.append(("pre", f.job_id)))
+    farm.drain()
+    fut.add_done_callback(lambda f: seen.append(("post", f.job_id)))
+    assert seen == [("pre", fut.job_id), ("post", fut.job_id)]
+
+
+def test_cancel_dequeues_and_spares_binmates():
+    """A cancelled queued job is done (raising FarmJobCancelled), never runs,
+    and the rest of the queue drains normally; running/finished jobs refuse."""
+    farm = CobiFarm(1)
+    f1 = farm.submit(_instance(14, 20), jax.random.key(14), reads=8, steps=60)
+    f2 = farm.submit(_instance(15, 24), jax.random.key(15), reads=8, steps=60)
+    assert f2.cancel()
+    assert f2.done() and farm.pending_jobs() == 1
+    with pytest.raises(FarmJobCancelled):
+        f2.result()
+    assert not f2.cancel()  # already cancelled
+    farm.drain()
+    assert f1.result().spins.shape == (8, 20)
+    assert not f1.cancel()  # finished jobs cannot be cancelled
+    assert farm.stats().jobs_completed == 1
+
+
+def test_flush_hint_skips_linger():
+    """A producer-side flush resolves pending work promptly even though the
+    quiescence linger is far beyond the test horizon (and never blocks or
+    executes kernels on the calling thread)."""
+    farm = CobiFarm(1, policy="bin-full", linger=30.0)
+    fut = farm.submit(_instance(12, 20), jax.random.key(12), reads=8, steps=60)
+    t0 = time.monotonic()
+    farm.flush_hint()
+    assert time.monotonic() - t0 < 1.0  # non-blocking (no kernel ran here)
+    assert fut.result(timeout=60.0).spins.shape == (8, 20)
+    farm.close()
+
+
+def test_prewarm_compiles_shape_lattice():
+    farm = CobiFarm(2)
+    launches = farm.prewarm(reads=(6,), steps=30, max_bins=2, max_slots=8)
+    assert launches > 0
+    # prewarm is pure compilation: no jobs, results, or chip time recorded
+    stats = farm.stats()
+    assert stats.jobs_completed == 0 and stats.super_instances == 0
+    assert stats.bytes_h2d == 0
+
+
+def test_submit_after_close_rejected():
+    farm = CobiFarm(1, policy="timer", timer_interval=0.01)
+    farm.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        farm.submit(_instance(11, 10), jax.random.key(11))
+
+
+# ------------------------------------------------ pipelined decomposition
+
+
+def test_pipelined_planner_matches_sequential_any_solver():
+    """Planner final == decompose_solve for an arbitrary (even adversarial)
+    sub-solver, and firm (non-speculative) windows are never invalidated."""
+    problem = synthetic_benchmark(5, 85, 5, lam=0.5)
+
+    def runs(seed):
+        rng = np.random.default_rng(seed)
+
+        def solver(sub, m, _key):
+            x = np.zeros(sub.n, np.int32)
+            x[rng.choice(sub.n, m, replace=False)] = 1
+            return x
+
+        return solver
+
+    sel_seq, trace = decompose_solve(problem, runs(3), jax.random.key(2),
+                                     p=20, q=10)
+    plan = PipelinedDecomposition(problem, jax.random.key(2), p=20, q=10)
+    solver = runs(3)
+    firm_seen = {}
+    while not plan.done():
+        for spec in plan.pending_specs():
+            if not spec.speculative:
+                assert firm_seen.setdefault(spec.seq, spec.indices) == spec.indices
+        spec = plan.next_spec()
+        assert not spec.speculative  # the frontier is always firm
+        sub = problem.subproblem(np.asarray(spec.indices))
+        plan.resolve(solver(sub, spec.m, spec.key))
+    sel_pipe, trace_pipe = plan.final
+    np.testing.assert_array_equal(sel_pipe, sel_seq)
+    assert trace_pipe.num_solves == trace.num_solves == plan.replans
+
+
+def test_pipelined_planner_plans_whole_first_pass():
+    """All in-pass (tiling) windows are firm and planned before anything is
+    resolved -- that is the pipelining win."""
+    problem = synthetic_benchmark(1, 85, 5, lam=0.5)
+    plan = PipelinedDecomposition(problem, jax.random.key(0), p=20, q=10)
+    specs = plan.pending_specs()
+    assert len(specs) == 8  # (85 - 25)/10 windows + final
+    firm = [s for s in specs if not s.speculative]
+    assert len(firm) == 4  # the first full pass tiles 4 disjoint windows
+    cover = sorted(i for s in firm for i in s.indices)
+    assert cover == list(range(80))  # windows 0..3 tile sentences 0..79
+
+
+def test_guess_top_mu_cardinality():
+    problem = synthetic_benchmark(0, 30, 5, lam=0.5)
+    x = guess_top_mu(problem, 7)
+    assert x.sum() == 7 and x.shape == (30,)
+
+
+def test_engine_pipelined_windows_bit_identical_and_fewer_rounds():
+    """Engine-served oversized requests: pipelined windows produce the same
+    summaries as the lockstep window driver, with fewer farm drains."""
+    cfg = SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14,
+                      steps=100, p=20, q=10)
+    docs = [" ".join(synthetic_document(100 + i, n)) for i, n in
+            enumerate([12, 70])]
+
+    def serve(pipeline):
+        c = dataclasses.replace(cfg, pipeline_windows=pipeline)
+        eng = SummarizationEngine(c, n_chips=2)
+        responses = eng.run_batch([eng.submit(d, m=5) for d in docs], seed=0)
+        drains = eng.farm.stats().drains
+        eng.close()
+        return responses, drains
+
+    base, drains_lock = serve(False)
+    pipe, drains_pipe = serve(True)
+    for a, b in zip(base, pipe):
+        np.testing.assert_array_equal(a.selection, b.selection)
+        assert a.objective == b.objective
+    assert drains_pipe < drains_lock
+
+
+def test_engine_background_policy_serving_matches_manual():
+    """Full stack under a self-draining farm: the engine never drains, and
+    summaries are bit-identical to manual lockstep serving."""
+    cfg = SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14,
+                      steps=100, p=20, q=10)
+    docs = [" ".join(synthetic_document(200 + i, n)) for i, n in
+            enumerate([14, 70, 18])]
+
+    def serve(policy):
+        eng = SummarizationEngine(cfg, n_chips=2, policy=policy)
+        if eng.farm.policy != "manual":
+            eng.farm.linger = 0.01
+            eng.farm.timer_interval = 0.01
+        responses = eng.run_batch([eng.submit(d, m=5) for d in docs], seed=0)
+        eng.close()
+        return responses
+
+    base = serve("manual")
+    for policy in ("bin-full", "timer"):
+        got = serve(policy)
+        for a, b in zip(base, got):
+            np.testing.assert_array_equal(a.selection, b.selection)
+            assert a.objective == b.objective
+
+
+def test_farm_solve_es_decomposed_policy_equivalence():
+    """solve_es(farm=...) on an oversized problem: lockstep windows, the
+    speculative pipeline, and a background-policy farm all agree bitwise."""
+    problem = synthetic_benchmark(11, 70, 5, lam=0.5)
+    cfg = SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14,
+                      steps=100, decompose=True, p=20, q=10)
+    key = jax.random.key(4)
+
+    with CobiFarm(2) as farm:
+        lock = solve_es(problem, key,
+                        dataclasses.replace(cfg, pipeline_windows=False),
+                        farm=farm)
+    with CobiFarm(2) as farm:
+        pipe = solve_es(problem, key, cfg, farm=farm)
+    with CobiFarm(2, policy="bin-full", linger=0.01) as farm:
+        auto = solve_es(problem, key, cfg, farm=farm)
+    np.testing.assert_array_equal(lock.selection, pipe.selection)
+    np.testing.assert_array_equal(lock.selection, auto.selection)
+    assert lock.objective == pipe.objective == auto.objective

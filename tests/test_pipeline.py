@@ -1,13 +1,11 @@
 """End-to-end pipeline behaviour (paper Secs. IV-V, simulation-level)."""
 
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SolveConfig, es_objective, solve_es
+from repro.core import SolveConfig, solve_es
 from repro.core.metrics import normalized_objective, reference_bounds
 from repro.core.pipeline import repair_selection
 from repro.data.synthetic import synthetic_benchmark

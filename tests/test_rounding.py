@@ -1,7 +1,6 @@
 """Quantization schemes (paper Sec. IV-A): ranges, symmetry, unbiasedness."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

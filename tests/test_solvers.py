@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import improved_ising, quantize_ising
-from repro.core.formulation import IsingProblem, ising_offset, qubo_improved
+from repro.core.formulation import IsingProblem
 from repro.data.synthetic import synthetic_benchmark
 from repro.kernels import ops
 from repro.solvers import brute, cobi, greedy, random_baseline, sa, tabu
