@@ -21,7 +21,10 @@ additionally serves the same 16-request mix through a SELF-draining farm (no
 engine round barrier: the background drive loop fires the drains) and
 reports its rps against the lockstep farm4 baseline, plus a streaming
 tail-latency scenario where per-job completion is timestamped by
-``FarmFuture.add_done_callback``.
+``FarmFuture.add_done_callback``, and an admission-controlled saturation
+scenario (open-loop burst through the continuous ``submit()`` API against a
+bounded queue with sim-clock deadlines: goodput, rejection rate, and p95
+submit->done latency under overload).
 """
 
 from __future__ import annotations
@@ -46,7 +49,10 @@ def _engine(cfg, n_chips, farm=None):
 
 
 def _serve(engine, docs, seed=0):
-    reqs = [engine.submit(doc, m=5) for doc in docs]
+    from repro.serving import SummarizeRequest
+
+    reqs = [SummarizeRequest(text=doc, m=5, request_id=i + 1)
+            for i, doc in enumerate(docs)]
     return engine.run_batch(reqs, seed=seed)
 
 
@@ -175,6 +181,70 @@ def run(tiny: bool = False, json_path: str | None = None,
               dt / len(docs) * 1e6, derived, rps=rps,
               occupancy=stats.mean_occupancy, bytes_per_req=bytes_per_req,
               rps_vs_lockstep=dt_lock / dt)
+
+    # -- admission-controlled saturation: open-loop overload ---------------
+    # An arrival burst far beyond chip capacity through the continuous
+    # submit() API with a bounded queue and per-request sim-clock deadlines:
+    # the admission layer sheds the infeasible tail (EngineOverloadedError)
+    # instead of letting the queue blow every deadline.  Reports GOODPUT
+    # (completed requests/sec), p95 submit->done wall latency of admitted
+    # requests, and the rejection rate under overload.
+    if policy and policy != "manual":
+        import numpy as _np
+
+        from repro.serving import (AdmissionConfig, EngineOverloadedError,
+                                   SummarizationEngine)
+
+        def saturate(seed):
+            eng = SummarizationEngine(
+                cfg, n_chips=4, policy=policy, seed=seed,
+                admission=AdmissionConfig(max_queue_depth=8,
+                                          overload="reject"),
+            )
+            eng.farm.linger = 0.01
+            eng.farm.timer_interval = 0.01
+            burst = docs * 4
+            futs, rejected, done_at = [], 0, {}
+            t0 = time.perf_counter()
+            for doc in burst:
+                deadline = eng.backend.sim_now() + 0.02
+                try:
+                    fut = eng.submit(doc, m=5, deadline=deadline)
+                except EngineOverloadedError:
+                    rejected += 1
+                    continue
+                submit_at = time.perf_counter()
+                fut.add_done_callback(
+                    lambda f, s=submit_at: done_at.__setitem__(
+                        f.request_id, time.perf_counter() - s)
+                )
+                futs.append(fut)
+            responses = [f.result(timeout=120.0) for f in futs]
+            wall = time.perf_counter() - t0
+            eng.close()
+            lat = _np.asarray([done_at[f.request_id] for f in futs])
+            met = [r.deadline_met for r in responses
+                   if r.deadline_met is not None]
+            return dict(
+                offered=len(burst), completed=len(responses),
+                rejected=rejected, wall=wall, lat=lat,
+                met=(sum(met), len(met)),
+            )
+
+        saturate(1)  # warmup: jit + thread spin-up
+        s = saturate(0)
+        goodput = s["completed"] / s["wall"]
+        p95 = float(_np.percentile(s["lat"], 95) * 1e3)
+        reject_rate = s["rejected"] / s["offered"]
+        _emit(
+            results,
+            f"farm_throughput_admission_{policy}_{s['offered']}req",
+            s["wall"] / s["offered"] * 1e6,
+            f"goodput_rps={goodput:.2f};offered_rps="
+            f"{s['offered'] / s['wall']:.2f};reject_rate={reject_rate:.2f}"
+            f";p95_ms={p95:.1f};deadlines_met={s['met'][0]}/{s['met'][1]}",
+            rps=goodput, p95_ms=p95,
+        )
 
     # Heavy-tailed mix straight against the farm: best-fit-decreasing packing
     # + replica tiers, fused drains.  Each request contributes the engine's

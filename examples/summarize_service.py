@@ -1,8 +1,20 @@
-"""End-to-end serving driver (the paper's deployment scenario): a batch of
-summarization requests served through the engine, with per-request latency
-and projected COBI energy, plus a solver A/B comparison.
+"""End-to-end serving driver (the paper's deployment scenario), in two modes.
+
+**Batch mode** (default): a batch of summarization requests served through
+``SummarizationEngine.run_batch`` -- all requests' subproblems share the
+farm's packed anneals round by round -- with per-request latency and
+projected COBI energy.
 
   PYTHONPATH=src python examples/summarize_service.py [--requests 6]
+
+**Open-loop mode** (``--arrival-rate R``): requests arrive continuously at R
+requests/second through the enqueueing ``submit()`` API, each returning an
+awaitable ``ResponseFuture``; responses are collected in completion order
+and admission control (``--max-queue-depth``, ``--deadline``) sheds or
+degrades load under overload instead of letting the queue grow unboundedly:
+
+  PYTHONPATH=src python examples/summarize_service.py \\
+      --arrival-rate 200 --requests 32 --max-queue-depth 8 --policy deadline
 
 ``--policy bin-full|deadline|timer`` makes the farm self-draining: the
 engine never supplies a round barrier, futures resolve from the background
@@ -10,11 +22,105 @@ drive loop, and results stay bit-identical to the manual default.
 """
 
 import argparse
+import time
 
 from repro.core import SolveConfig
 from repro.data.synthetic import synthetic_document
 from repro.farm import DRAIN_POLICIES
-from repro.serving import SummarizationEngine
+from repro.serving import (
+    AdmissionConfig,
+    EngineOverloadedError,
+    SummarizationEngine,
+    SummarizeRequest,
+)
+
+SIZES = [14, 20, 26, 70, 18, 24]  # mixed: some need decomposition (>59 spins)
+
+
+def _print_response(resp):
+    score = f"{resp.normalized:.3f}" if resp.normalized is not None else "n/a"
+    extras = ""
+    if resp.deadline_met is not None:
+        extras += f" | deadline {'MET' if resp.deadline_met else 'MISSED'}"
+    if resp.degraded:
+        extras += f" | degraded to reads={resp.reads_used}"
+    print(
+        f"  req {resp.request_id}: {len(resp.summary)} sentences | "
+        f"norm_obj={score} | wall={resp.wall_seconds * 1e3:.0f} ms | "
+        f"projected solver={resp.projected_solver_seconds * 1e3:.2f} ms, "
+        f"{resp.projected_energy_joules * 1e3:.3f} mJ | "
+        f"xfer={(resp.bytes_h2d + resp.bytes_d2h) / 1024:.0f} KiB | "
+        f"solves={resp.solver_invocations}{extras}"
+    )
+
+
+def _print_farm(engine):
+    if engine.farm is not None:
+        s = engine.farm.stats()
+        print(
+            f"Farm: {s.jobs_completed} jobs packed into {s.super_instances} "
+            f"super-instances on {len(s.chips)} chips | mean lane occupancy "
+            f"{s.mean_occupancy:.0%} | simulated makespan {s.sim_seconds * 1e3:.2f} ms"
+        )
+
+
+def run_batch_mode(engine, args):
+    sizes = SIZES[: args.requests] or SIZES
+    reqs = [
+        SummarizeRequest(
+            text=" ".join(synthetic_document(100 + i, n)), m=6, request_id=i + 1
+        )
+        for i, n in enumerate(sizes)
+    ]
+    print(f"Serving {len(reqs)} requests on solver={args.solver!r} ...")
+    responses = engine.run_batch(reqs)
+
+    total_e = 0.0
+    for resp in responses:
+        _print_response(resp)
+        total_e += resp.projected_energy_joules
+    print(f"\nBatch projected solver energy: {total_e * 1e3:.3f} mJ "
+          f"(paper: ~3 orders below CPU Tabu search)")
+    _print_farm(engine)
+    print("First summary:")
+    for s in responses[0].summary:
+        print(f"  - {s}")
+
+
+def run_open_loop(engine, args):
+    """Continuous arrival at --arrival-rate rps: submit() enqueues, futures
+    resolve as the driver + drain policy serve; admission sheds overload."""
+    n = args.requests
+    gap = 1.0 / args.arrival_rate
+    print(f"Open loop: {n} requests at {args.arrival_rate:.0f} rps, "
+          f"policy={args.policy!r}, max_queue_depth="
+          f"{args.max_queue_depth or 'unbounded'} ...")
+    futures, rejected = [], 0
+    t0 = time.perf_counter()
+    for i in range(n):
+        doc = " ".join(synthetic_document(300 + i, SIZES[i % len(SIZES)] % 40))
+        sim_now = engine.backend.sim_now() if engine.backend is not None else 0.0
+        deadline = sim_now + args.deadline if args.deadline > 0 else None
+        try:
+            futures.append(engine.submit(doc, m=6, deadline=deadline))
+        except EngineOverloadedError:
+            rejected += 1
+        time.sleep(gap)
+    responses = [f.result(timeout=600.0) for f in futures]
+    wall = time.perf_counter() - t0
+
+    for resp in responses:
+        _print_response(resp)
+    met = [r.deadline_met for r in responses if r.deadline_met is not None]
+    stats = engine.admission.stats()
+    print(
+        f"\nGoodput {len(responses) / wall:.1f} rps | offered "
+        f"{n / wall:.1f} rps | shed {rejected}/{n} "
+        f"({100 * rejected / max(n, 1):.0f}%) | degraded {stats.degraded} | "
+        f"peak queue depth {stats.peak_depth}"
+        + (f" | deadlines met {sum(met)}/{len(met)}" if met else "")
+    )
+    _print_farm(engine)
 
 
 def main():
@@ -25,48 +131,34 @@ def main():
                     help="simulated COBI chips in the farm (0 = legacy loop)")
     ap.add_argument("--policy", default="manual", choices=list(DRAIN_POLICIES),
                     help="farm drain policy (non-manual = self-draining farm)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop arrivals per second (0 = batch mode)")
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="admission cap on in-flight requests (0 = unbounded)")
+    ap.add_argument("--overload", default="reject", choices=["reject", "degrade"],
+                    help="admission response past the cap / infeasible deadline")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request sim-clock deadline in seconds (0 = none)")
     args = ap.parse_args()
 
+    admission = None
+    if args.max_queue_depth > 0 or args.deadline > 0:
+        admission = AdmissionConfig(
+            max_queue_depth=args.max_queue_depth or None,
+            overload=args.overload,
+        )
     engine = SummarizationEngine(
         SolveConfig(solver=args.solver, iterations=4, reads=8, int_range=14,
                     steps=300, p=20, q=10),
         score_against_exact=True,
         n_chips=args.chips,
         policy=args.policy,
+        admission=admission,
     )
-
-    # Mixed-size request batch: some need decomposition (>59 spins).
-    sizes = [14, 20, 26, 70, 18, 24][: args.requests]
-    reqs = [
-        engine.submit(" ".join(synthetic_document(100 + i, n)), m=6)
-        for i, n in enumerate(sizes)
-    ]
-    print(f"Serving {len(reqs)} requests on solver={args.solver!r} ...")
-    responses = engine.run_batch(reqs)
-
-    total_e = 0.0
-    for req, resp in zip(reqs, responses):
-        score = f"{resp.normalized:.3f}" if resp.normalized is not None else "n/a"
-        print(
-            f"  req {resp.request_id}: {len(resp.summary)} sentences | "
-            f"norm_obj={score} | wall={resp.wall_seconds * 1e3:.0f} ms | "
-            f"projected solver={resp.projected_solver_seconds * 1e3:.2f} ms, "
-            f"{resp.projected_energy_joules * 1e3:.3f} mJ | "
-            f"solves={resp.solver_invocations}"
-        )
-        total_e += resp.projected_energy_joules
-    print(f"\nBatch projected solver energy: {total_e * 1e3:.3f} mJ "
-          f"(paper: ~3 orders below CPU Tabu search)")
-    if engine.farm is not None:
-        s = engine.farm.stats()
-        print(
-            f"Farm: {s.jobs_completed} jobs packed into {s.super_instances} "
-            f"super-instances on {len(s.chips)} chips | mean lane occupancy "
-            f"{s.mean_occupancy:.0%} | simulated makespan {s.sim_seconds * 1e3:.2f} ms"
-        )
-    print("First summary:")
-    for s in responses[0].summary:
-        print(f"  - {s}")
+    if args.arrival_rate > 0:
+        run_open_loop(engine, args)
+    else:
+        run_batch_mode(engine, args)
     engine.close()
 
 

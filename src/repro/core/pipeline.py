@@ -1,6 +1,14 @@
 """End-to-end ES solve pipeline (paper Sec. V): improved formulation ->
 stochastic rounding -> integer Ising -> solver (COBI / Tabu / SA) ->
 best-of-iterations under the FP objective -> optional decomposition driver.
+
+Per-iteration solver dispatch goes through the ``repro.solvers.base`` name
+registry (no per-solver branching here), and the generator drivers at the
+bottom of this module run against ANY :class:`repro.solvers.base.SolverBackend`
+(the COBI chip farm or a host thread pool): iterations submit as jobs, a
+driver interleaves many requests' rounds, and futures reduce back into a
+:class:`SolveReport` that carries the backend's receipt accounting
+(chip time, energy, attributed host<->device bytes, sim-clock completion).
 """
 
 from __future__ import annotations
@@ -21,9 +29,7 @@ from repro.core.formulation import (
     original_ising,
 )
 from repro.core.rounding import COBI_RANGE, quantize_ising, quantize_ising_many
-from repro.solvers import cobi as cobi_solver
-from repro.solvers import sa as sa_solver
-from repro.solvers import tabu as tabu_solver
+from repro.solvers import base as solver_base
 from repro.solvers import brute as brute_solver
 from repro.solvers import random_baseline
 
@@ -71,6 +77,31 @@ class SolveReport:
     # to the per-invocation hardware model.
     chip_seconds: float = 0.0
     chip_energy_joules: float = 0.0
+    # Host<->device traffic the solve's jobs were billed for (per-job lane
+    # share of each drain launch) and the absolute sim-clock time the last
+    # consumed job finished -- both 0 for host-solver / legacy paths.
+    bytes_h2d: int = 0
+    bytes_d2h: int = 0
+    sim_completed: float = 0.0
+
+
+@dataclasses.dataclass
+class _Acct:
+    """Receipt accumulator threaded through the backend reduce paths."""
+
+    chip_seconds: float = 0.0
+    energy_joules: float = 0.0
+    bytes_h2d: int = 0
+    bytes_d2h: int = 0
+    sim_completed: float = 0.0
+
+    def add(self, other) -> None:
+        """Fold in a receipt or another accumulator (same field names)."""
+        self.chip_seconds += other.chip_seconds
+        self.energy_joules += other.energy_joules
+        self.bytes_h2d += other.bytes_h2d
+        self.bytes_d2h += other.bytes_d2h
+        self.sim_completed = max(self.sim_completed, other.sim_completed)
 
 
 def repair_selection(problem: EsProblem, x: np.ndarray) -> np.ndarray:
@@ -123,19 +154,6 @@ def _build_ising(problem: EsProblem, cfg: SolveConfig) -> IsingProblem:
     raise ValueError(f"unknown formulation {cfg.formulation!r}")
 
 
-def _invoke(ising: IsingProblem, cfg: SolveConfig, key: Array):
-    if cfg.solver == "cobi":
-        return cobi_solver.solve(
-            ising, key, reads=cfg.reads, steps=cfg.steps,
-            check=cfg.int_range is not None or cfg.bits is not None,
-        )
-    if cfg.solver == "tabu":
-        return tabu_solver.solve(ising, key, replicas=cfg.reads)
-    if cfg.solver == "sa":
-        return sa_solver.solve(ising, key, replicas=cfg.reads)
-    raise ValueError(f"unknown Ising solver {cfg.solver!r}")
-
-
 def _objective_np(problem: EsProblem, x: np.ndarray) -> float:
     """Eq. (3) in host float32: the per-iteration reduce runs once per read
     batch per request, and eager-jnp dispatch dominated at farm throughput."""
@@ -177,18 +195,23 @@ def solve_es(
     cfg: SolveConfig = SolveConfig(),
     *,
     farm=None,
+    backend=None,
     priority: int = 0,
 ) -> SolveReport:
     """Solve one ES instance per the paper's iterative workflow (Sec. IV-A).
 
-    With ``farm`` (a :class:`repro.farm.CobiFarm`) and ``solver='cobi'``, all
-    of the instance's stochastic-rounding iterations (and, when decomposing,
-    each window's iterations) go through the farm as one packed submission
-    per round instead of one kernel launch per iteration.
+    With ``backend`` (any :class:`repro.solvers.base.SolverBackend` -- the
+    COBI chip farm, a host thread pool; ``farm=`` is the historical alias),
+    all of the instance's stochastic-rounding iterations (and, when
+    decomposing, each window's iterations) go through the backend as one
+    submission round instead of one inline solver call per iteration.
+    Results are bit-identical to the inline path for the same key.
     """
-    if farm is not None and cfg.solver == "cobi":
-        return drive_with_farm(
-            iter_solve_es(problem, key, cfg, farm=farm, priority=priority), farm
+    backend = backend if backend is not None else farm
+    if backend is not None and cfg.solver in solver_base.ISING_SOLVER_NAMES:
+        return drive_with_backend(
+            iter_solve_es(problem, key, cfg, backend=backend, priority=priority),
+            backend,
         )
     if cfg.decompose:
         return _solve_decomposed(problem, key, cfg)
@@ -206,10 +229,13 @@ def solve_es(
         )
 
     ising_fp = _build_ising(problem, cfg)
+    solve = solver_base.ising_solver(cfg.solver)
+    check = cfg.int_range is not None or cfg.bits is not None
     best_x, best_obj, curve = None, -np.inf, []
     for k_quant, k_solve in _iteration_keys(key, cfg.iterations):
         inst = _quantized_instance(ising_fp, cfg, k_quant)
-        result = _invoke(inst, cfg, k_solve)
+        result = solve(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
+                       check=check)
         x = _best_selection(result)
         if cfg.repair:
             x = repair_selection(problem, x)
@@ -245,24 +271,26 @@ def _solve_decomposed(problem: EsProblem, key: Array, cfg: SolveConfig) -> Solve
 
 
 # ---------------------------------------------------------------------------
-# Farm-scheduled solving: generators that submit whole rounds of jobs to a
-# CobiFarm, yield so a driver can pack jobs ACROSS requests, then consume the
-# futures.  Protocol: each `yield` marks "submissions for this round done";
-# the driver calls farm.drain() (once, for all concurrently active
-# generators) and resumes.
+# Backend-scheduled solving: generators that submit whole rounds of jobs to a
+# SolverBackend (the COBI chip farm, a host thread pool), yield so a driver
+# can interleave jobs ACROSS requests, then consume the futures.  Protocol:
+# each `yield` marks "submissions for this round done"; the driver calls
+# backend.drain() (once, for all concurrently active generators, when the
+# backend's policy is "manual") and resumes.
 # ---------------------------------------------------------------------------
 
 
-def _submit_cobi_iterations(
-    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
-    deadline: Optional[float] = None,
+def _submit_iterations(
+    problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
+    deadline: Optional[float] = None, tag: Optional[int] = None,
 ):
-    """Submit the instance's cfg.iterations anneal jobs; returns the futures.
+    """Submit the instance's cfg.iterations solve jobs; returns the futures.
 
     Jobs go in with ``reduce="best"``: the per-iteration argmin-energy read is
     the ONLY thing the reduce consumes, so the farm's fused epilogue keeps
     replica spins/energies on device and each future resolves to just the
-    winner (bit-identical to all-reads + host argmin on integer instances).
+    winner (bit-identical to all-reads + host argmin on integer instances;
+    host backends apply the same first-argmin reduction in the worker).
     """
     ising_fp = _build_ising(problem, cfg)
     check = cfg.int_range is not None or cfg.bits is not None
@@ -277,22 +305,26 @@ def _submit_cobi_iterations(
     else:
         instances = [ising_fp] * cfg.iterations
     return [
-        farm.submit(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
-                    priority=priority, deadline=deadline, check=check,
-                    reduce="best")
+        backend.submit(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
+                       priority=priority, deadline=deadline, check=check,
+                       reduce="best", tag=tag)
         for inst, (_, k_solve) in zip(instances, keypairs)
     ]
 
 
-def _reduce_cobi_iterations(problem: EsProblem, cfg: SolveConfig, futures):
-    """Consume one instance's iteration futures -> best-of + accounting."""
+def _reduce_iterations(problem: EsProblem, cfg: SolveConfig, futures):
+    """Consume one instance's iteration futures -> best-of + accounting.
+
+    Each future is released after its result AND receipt are consumed, so a
+    long-lived backend's completed-job buffers stay bounded under continuous
+    serving without a batch-scoped ``clear_completed`` sweep.
+    """
     best_x, best_obj, curve = None, -np.inf, []
-    chip_seconds = energy = 0.0
+    acct = _Acct()
     for fut in futures:
         result = fut.result()
-        receipt = fut.receipt()
-        chip_seconds += receipt.chip_seconds
-        energy += receipt.energy_joules
+        acct.add(fut.receipt())
+        fut.release()
         x = _best_selection(result)
         if cfg.repair:
             x = repair_selection(problem, x)
@@ -300,17 +332,18 @@ def _reduce_cobi_iterations(problem: EsProblem, cfg: SolveConfig, futures):
         if obj > best_obj:
             best_obj, best_x = obj, x
         curve.append(best_obj)
-    return best_x, best_obj, curve, chip_seconds, energy
+    return best_x, best_obj, curve, acct
 
 
-def _iter_cobi_iterations(
-    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
-    deadline: Optional[float] = None,
+def _iter_iterations(
+    problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
+    deadline: Optional[float] = None, tag: Optional[int] = None,
 ):
     """Submit the instance's iteration jobs, yield (round barrier), reduce."""
-    futures = _submit_cobi_iterations(problem, key, cfg, farm, priority, deadline)
+    futures = _submit_iterations(problem, key, cfg, backend, priority,
+                                 deadline, tag)
     yield futures
-    return _reduce_cobi_iterations(problem, cfg, futures)
+    return _reduce_iterations(problem, cfg, futures)
 
 
 def iter_solve_es(
@@ -318,43 +351,57 @@ def iter_solve_es(
     key: Array,
     cfg: SolveConfig = SolveConfig(),
     *,
-    farm,
+    backend=None,
+    farm=None,
     priority: int = 0,
     deadline: Optional[float] = None,
+    tag: Optional[int] = None,
 ):
-    """Generator form of :func:`solve_es` over a chip farm (cobi only).
+    """Generator form of :func:`solve_es` over a :class:`SolverBackend`.
 
-    Yields once per submission round (one round for a direct solve; a
-    decomposed solve yields once per window under ``pipeline_windows=False``
-    and only on unresolved frontiers under the default pipelined driver);
-    returns a :class:`SolveReport` whose chip_seconds / chip_energy_joules
-    come from the farm's job receipts.  ``deadline`` (absolute simulated
-    time) is stamped on every submitted job, which is what the farm's
-    ``policy="deadline"`` watermark trigger keys on.
+    ``backend`` is any submit->future backend (``farm=`` is the historical
+    alias for the same parameter); the solver must be in the
+    ``repro.solvers.base`` registry.  Yields once per submission round (one
+    round for a direct solve; a decomposed solve yields once per window under
+    ``pipeline_windows=False`` and only on unresolved frontiers under the
+    default pipelined driver); returns a :class:`SolveReport` whose
+    chip_seconds / chip_energy_joules / bytes / sim_completed come from the
+    backend's job receipts.  ``deadline`` (absolute simulated time) is
+    stamped on every submitted job, which is what the farm's
+    ``policy="deadline"`` watermark trigger keys on; ``tag`` (opaque caller
+    metadata, e.g. a serving request id) is echoed on every receipt.
     """
-    if cfg.solver != "cobi":
-        raise ValueError(f"farm scheduling requires solver='cobi', got {cfg.solver!r}")
+    backend = backend if backend is not None else farm
+    if backend is None:
+        raise ValueError("iter_solve_es requires a backend (or farm) argument")
+    if cfg.solver not in solver_base.ISING_SOLVER_NAMES:
+        raise ValueError(
+            f"backend scheduling requires a registry solver "
+            f"{solver_base.ISING_SOLVER_NAMES}, got {cfg.solver!r}"
+        )
     if cfg.decompose:
         if cfg.pipeline_windows:
-            return (yield from _iter_cobi_decomposed(
-                problem, key, cfg, farm, priority, deadline
+            return (yield from _iter_decomposed(
+                problem, key, cfg, backend, priority, deadline, tag
             ))
-        return (yield from _iter_cobi_decomposed_lockstep(
-            problem, key, cfg, farm, priority, deadline
+        return (yield from _iter_decomposed_lockstep(
+            problem, key, cfg, backend, priority, deadline, tag
         ))
-    best_x, best_obj, curve, chip_seconds, energy = yield from _iter_cobi_iterations(
-        problem, key, cfg, farm, priority, deadline
+    best_x, best_obj, curve, acct = yield from _iter_iterations(
+        problem, key, cfg, backend, priority, deadline, tag
     )
     return SolveReport(
-        best_x, best_obj, np.asarray(curve), cfg.iterations, chip_seconds, energy
+        best_x, best_obj, np.asarray(curve), cfg.iterations,
+        acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
+        acct.sim_completed,
     )
 
 
-def _iter_cobi_decomposed_lockstep(
-    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
-    deadline: Optional[float] = None,
+def _iter_decomposed_lockstep(
+    problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
+    deadline: Optional[float] = None, tag: Optional[int] = None,
 ):
-    """Legacy decomposed farm driver: ONE window in flight at a time.
+    """Legacy decomposed backend driver: ONE window in flight at a time.
 
     Kept as the ``pipeline_windows=False`` fallback (and as the reference the
     pipelined driver is equivalence-tested against): each window submits,
@@ -364,15 +411,14 @@ def _iter_cobi_decomposed_lockstep(
     k_dec, _ = jax.random.split(key)
     sub_cfg = dataclasses.replace(cfg, decompose=False)
     steps = decomp.decompose_steps(problem, k_dec, p=cfg.p, q=cfg.q)
-    chip_seconds = energy = 0.0
+    acct = _Acct()
     item = next(steps)
     while True:
         sub, m, k_sub = item
-        sel, _, _, cs, en = yield from _iter_cobi_iterations(
-            sub.with_m(m), k_sub, sub_cfg, farm, priority, deadline
+        sel, _, _, sub_acct = yield from _iter_iterations(
+            sub.with_m(m), k_sub, sub_cfg, backend, priority, deadline, tag
         )
-        chip_seconds += cs
-        energy += en
+        acct.add(sub_acct)
         try:
             item = steps.send(sel)
         except StopIteration as done:
@@ -383,15 +429,16 @@ def _iter_cobi_decomposed_lockstep(
     obj = float(es_objective(problem, jnp.asarray(selection)))
     return SolveReport(
         selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations,
-        chip_seconds, energy,
+        acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
+        acct.sim_completed,
     )
 
 
-def _iter_cobi_decomposed(
-    problem: EsProblem, key: Array, cfg: SolveConfig, farm, priority: int,
-    deadline: Optional[float] = None,
+def _iter_decomposed(
+    problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
+    deadline: Optional[float] = None, tag: Optional[int] = None,
 ):
-    """Pipelined decomposed farm driver: ALL planned windows in flight.
+    """Pipelined decomposed backend driver: ALL planned windows in flight.
 
     Plans every window of the request up front via
     :class:`repro.core.decomposition.PipelinedDecomposition` (speculating on
@@ -416,7 +463,7 @@ def _iter_cobi_decomposed(
     )
     inflight: dict = {}  # (seq, indices) -> (subproblem, futures)
     windows_submitted = 0
-    chip_seconds = energy = 0.0
+    acct = _Acct()
     consumed: set = set()
     while not plan.done():
         for spec in plan.pending_specs():
@@ -432,8 +479,8 @@ def _iter_cobi_decomposed(
                 sub = problem.subproblem(np.asarray(spec.indices)).with_m(spec.m)
                 inflight[fkey] = (
                     sub,
-                    _submit_cobi_iterations(
-                        sub, spec.key, sub_cfg, farm, priority, deadline
+                    _submit_iterations(
+                        sub, spec.key, sub_cfg, backend, priority, deadline, tag
                     ),
                 )
                 windows_submitted += 1
@@ -442,45 +489,64 @@ def _iter_cobi_decomposed(
         sub, futures = inflight[fkey]
         if not all(f.done() for f in futures):
             yield futures
-        sel, _, _, cs, en = _reduce_cobi_iterations(sub, sub_cfg, futures)
-        chip_seconds += cs
-        energy += en
+        sel, _, _, sub_acct = _reduce_iterations(sub, sub_cfg, futures)
+        acct.add(sub_acct)
         consumed.add(fkey)
         plan.resolve(sel)
-    # Mis-speculated windows that already annealed burned real chip time:
-    # bill them to this request (their receipts exist iff a drain ran them).
-    # Still-queued orphans are cancelled so they never pollute a later,
-    # unrelated drain's packing/accounting.
+    # Mis-speculated windows that already annealed burned real chip time
+    # (and transfer bytes): bill them to this request (their receipts exist
+    # iff a drain ran them), but do NOT let them move sim_completed -- the
+    # request's answer was available without them.  Still-queued orphans are
+    # cancelled so they never pollute a later, unrelated drain's
+    # packing/accounting; either way the job's buffers are released.
     for fkey, (_, futures) in inflight.items():
         if fkey in consumed:
             continue
         for fut in futures:
             if fut.done():
                 receipt = fut.receipt()
-                chip_seconds += receipt.chip_seconds
-                energy += receipt.energy_joules
+                acct.chip_seconds += receipt.chip_seconds
+                acct.energy_joules += receipt.energy_joules
+                acct.bytes_h2d += receipt.bytes_h2d
+                acct.bytes_d2h += receipt.bytes_d2h
+                fut.release()
             else:
                 fut.cancel()
+                # Cancelled -> done now, callback releases immediately; a job
+                # MID-DRAIN (cancel refused, not yet done) releases from the
+                # drain thread's commit -- without this, an orphan completing
+                # after reconciliation would strand its result/receipt in the
+                # farm's buffers forever (its chip time escapes the bill; the
+                # request's answer never depended on it).
+                fut.add_done_callback(lambda f: f.release())
     selection, _trace = plan.final
     if cfg.repair:
         selection = repair_selection(problem, selection)
     obj = float(es_objective(problem, jnp.asarray(selection)))
     return SolveReport(
         selection, obj, np.asarray([obj]), windows_submitted * cfg.iterations,
-        chip_seconds, energy,
+        acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
+        acct.sim_completed,
     )
 
 
-def drive_with_farm(gen, farm) -> SolveReport:
-    """Run one farm generator to completion, draining between rounds.
+def drive_with_backend(gen, backend) -> SolveReport:
+    """Run one backend generator to completion, draining between rounds.
 
-    For cross-request packing, drive many generators in lockstep instead and
-    drain once per round (see serving.engine.SummarizationEngine.run_batch).
+    Only a ``policy="manual"`` backend needs the caller-side round barrier;
+    self-draining backends (background farm policies, thread pools) resolve
+    futures on their own and the drain call is a harmless flush.  For
+    cross-request packing, drive many generators in lockstep instead and
+    drain once per round (see serving.engine.SummarizationEngine).
     """
     try:
         next(gen)
         while True:
-            farm.drain()
+            backend.drain()
             gen.send(None)
     except StopIteration as done:
         return done.value
+
+
+# Historical alias (pre-SolverBackend name).
+drive_with_farm = drive_with_backend

@@ -25,7 +25,17 @@ A drain flushes (part of) the queue:
      legacy two-launch path (full phases, separate batched energy scoring)
      and return every read;
   4. futures resolve to :class:`repro.solvers.base.SolverResult` plus a
-     :class:`JobReceipt` carrying the paper's latency/energy accounting.
+     :class:`JobReceipt` carrying the paper's latency/energy accounting,
+     the job's lane-share of its drain's h2d/d2h bytes (exact integer
+     apportionment -- a launch group's receipts sum to the bytes it moved),
+     the absolute sim-clock completion time, and the caller's opaque
+     ``tag`` (e.g. the serving engine's request id).  A long-lived consumer
+     calls ``future.release()`` after reducing to keep the completed-job
+     buffers bounded without the batch-scoped ``clear_completed`` sweep.
+
+``CobiFarm`` satisfies the :class:`repro.solvers.base.SolverBackend`
+protocol (structurally), so the serving engine drives it and the host
+thread-pool backend through one submit->future->reduce loop.
 
 Drain-policy state machine (``policy=`` at construction)::
 
@@ -165,6 +175,10 @@ class FarmJob:
     deadline: Optional[float]
     submit_sim_time: float
     reduce: str = "none"
+    # Opaque caller metadata (e.g. the serving engine's request id, stamped
+    # by its admission layer) echoed on the job's receipt, so per-request
+    # SLO accounting can group farm receipts without a side table.
+    tag: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +193,13 @@ class JobReceipt:
     sim_latency_seconds: float  # submit -> bin completion on the sim clock
     chip_seconds: float  # chip busy time attributed to this job (lane share)
     energy_joules: float  # chip energy attributed to this job
+    # Drain-level host<->device traffic attributed to this job by lane share
+    # (exact integer split: a launch group's per-job bytes sum to the bytes
+    # the group actually moved), so serving SLOs can bill transfer.
+    bytes_h2d: int = 0
+    bytes_d2h: int = 0
+    sim_completed: float = 0.0  # absolute sim-clock time the job's bin finished
+    tag: Optional[int] = None  # caller metadata echoed from submit()
 
 
 @dataclasses.dataclass
@@ -277,6 +298,21 @@ class FarmFuture:
                 self._callbacks.append(fn)
                 return
         fn(self)
+
+    def release(self) -> None:
+        """Drop this job's stored result/receipt/error from the farm.
+
+        The per-job form of ``clear_completed``: a long-lived consumer (the
+        serving engine) releases each future right after reducing it, so
+        sustained continuous load stays memory-bounded without nuking the
+        buffers of unrelated in-flight requests.  Idempotent; after release
+        the future stays ``done()`` but is no longer readable."""
+        farm = self._farm
+        with farm._lock:
+            farm._results.pop(self.job_id, None)
+            farm._receipts.pop(self.job_id, None)
+            farm._errors.pop(self.job_id, None)
+            farm._jobs.pop(self.job_id, None)
 
     def __await__(self):
         if not self._event.is_set():
@@ -388,6 +424,7 @@ class CobiFarm:
         self._sim_time = 0.0
         self._cycle = 0  # global chip-cycle counter
         self._drains = 0
+        self._completed = 0  # cumulative jobs completed (survives release)
         self._bytes_h2d = 0
         self._bytes_d2h = 0
         self._chips = [ChipStats(chip_id=c) for c in range(n_chips)]
@@ -420,6 +457,7 @@ class CobiFarm:
         deadline: Optional[float] = None,
         check: Optional[bool] = None,
         reduce: str = "none",
+        tag: Optional[int] = None,
     ) -> FarmFuture:
         """Queue one anneal job; rejects instances the chip cannot hold.
 
@@ -455,6 +493,7 @@ class CobiFarm:
                 deadline=deadline,
                 submit_sim_time=self._sim_time,
                 reduce=reduce,
+                tag=tag,
             )
             self._pending.append(job)
             self._jobs[job.job_id] = job
@@ -628,10 +667,15 @@ class CobiFarm:
                 jid: j for jid, j in self._jobs.items() if jid in pending_ids
             }
 
+    def sim_now(self) -> float:
+        """Current simulated-hardware clock (advanced by drains)."""
+        with self._lock:
+            return self._sim_time
+
     def stats(self) -> FarmStats:
         with self._lock:
             return FarmStats(
-                jobs_completed=len(self._results),
+                jobs_completed=self._completed,
                 super_instances=sum(c.solves for c in self._chips),
                 drains=self._drains,
                 sim_seconds=self._sim_time,
@@ -869,7 +913,8 @@ class CobiFarm:
             self._bytes_h2d += h2d
             self._bytes_d2h += d2h
             self._results.update(results)
-            self._account(bins, slots, by_id, r_tier)
+            self._completed += len(results)
+            self._account(bins, slots, by_id, r_tier, h2d, d2h)
             # Results AND receipts are stored: resolve the futures (fires
             # done-callbacks from this -- possibly background -- thread).
             for _, _, slot in slots:
@@ -963,9 +1008,10 @@ class CobiFarm:
             )
         return results, h2d, d2h
 
-    def _account(self, bins, slots, by_id, r_tier: int):
+    def _account(self, bins, slots, by_id, r_tier: int, h2d: int, d2h: int):
         """Simulated hardware accounting: bins round-robin over chips, each
-        occupying its chip for the tier's sequential executions."""
+        occupying its chip for the tier's sequential executions.  The launch
+        group's host<->device bytes are attributed per job by lane share."""
         hw = self.hardware
         bin_seconds = r_tier * hw.seconds_per_solve
         b_real = len(bins)
@@ -984,7 +1030,10 @@ class CobiFarm:
         self._sim_time = t0 + cycles * bin_seconds
         self._cycle += cycles
 
-        for b, _, slot in slots:
+        lanes = [slot.n for _, _, slot in slots]
+        job_h2d = _attribute_bytes(h2d, lanes)
+        job_d2h = _attribute_bytes(d2h, lanes)
+        for k, (b, _, slot) in enumerate(slots):
             job = by_id[slot.job_id]
             inst = bins[b]
             share = slot.n / inst.lanes_used
@@ -997,7 +1046,29 @@ class CobiFarm:
                 sim_latency_seconds=bin_completion[b] - job.submit_sim_time,
                 chip_seconds=bin_seconds * share,
                 energy_joules=bin_seconds * share * hw.solver_power_w,
+                bytes_h2d=job_h2d[k],
+                bytes_d2h=job_d2h[k],
+                sim_completed=bin_completion[b],
+                tag=job.tag,
             )
+
+
+def _attribute_bytes(total: int, weights: Sequence[int]) -> List[int]:
+    """Split ``total`` bytes over jobs proportional to ``weights`` (lanes),
+    exactly: integer largest-remainder apportionment, so the per-job bytes of
+    one launch group always sum to the bytes the group actually moved."""
+    s = sum(weights)
+    if s <= 0 or total <= 0:
+        return [0] * len(weights)
+    floors = [(total * w) // s for w in weights]
+    remainder = total - sum(floors)
+    # Largest fractional parts (total*w mod s) get the leftover bytes;
+    # deterministic tie-break on position.
+    order = sorted(range(len(weights)),
+                   key=lambda i: (-((total * weights[i]) % s), i))
+    for i in order[:remainder]:
+        floors[i] += 1
+    return floors
 
 
 @functools.partial(jax.jit, static_argnames=("r", "lanes"))

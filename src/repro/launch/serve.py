@@ -1,6 +1,12 @@
 """Production serving launcher: the ES summarization service.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --solver cobi
+
+Serves through the continuous engine API: every request is ``submit()``-ed
+(admission-controlled enqueue returning a ``ResponseFuture``) and responses
+stream back in completion order.  ``--max-queue-depth`` bounds admitted
+work (excess submissions are rejected with ``EngineOverloadedError`` and
+reported), the overload posture of a real deployment.
 """
 
 from __future__ import annotations
@@ -9,7 +15,7 @@ import argparse
 
 from repro.core import SolveConfig
 from repro.data.synthetic import synthetic_document
-from repro.serving import SummarizationEngine
+from repro.serving import AdmissionConfig, EngineOverloadedError, SummarizationEngine
 
 
 def main():
@@ -18,23 +24,36 @@ def main():
     ap.add_argument("--solver", default="cobi", choices=["cobi", "tabu", "sa"])
     ap.add_argument("--m", type=int, default=6)
     ap.add_argument("--iterations", type=int, default=6)
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="admission cap on in-flight requests (0 = unbounded)")
     args = ap.parse_args()
 
+    admission = (AdmissionConfig(max_queue_depth=args.max_queue_depth)
+                 if args.max_queue_depth > 0 else None)
     engine = SummarizationEngine(
         SolveConfig(solver=args.solver, iterations=args.iterations, reads=8,
-                    int_range=14, p=20, q=10)
+                    int_range=14, p=20, q=10),
+        admission=admission,
     )
-    reqs = [
-        engine.submit(" ".join(synthetic_document(i, 20 + (i % 3) * 15)), m=args.m)
-        for i in range(args.requests)
-    ]
-    for resp in engine.run_batch(reqs):
+    futures, rejected = [], 0
+    for i in range(args.requests):
+        doc = " ".join(synthetic_document(i, 20 + (i % 3) * 15))
+        try:
+            futures.append(engine.submit(doc, m=args.m))
+        except EngineOverloadedError:
+            rejected += 1
+    for fut in futures:
+        resp = fut.result(timeout=600.0)
         print(
             f"req {resp.request_id}: {len(resp.summary)} sents, "
             f"obj={resp.objective:.3f}, wall={resp.wall_seconds * 1e3:.0f}ms, "
             f"projected={resp.projected_solver_seconds * 1e3:.2f}ms/"
-            f"{resp.projected_energy_joules * 1e3:.3f}mJ"
+            f"{resp.projected_energy_joules * 1e3:.3f}mJ, "
+            f"xfer={(resp.bytes_h2d + resp.bytes_d2h) / 1024:.0f}KiB"
         )
+    if rejected:
+        print(f"{rejected} request(s) shed by admission control")
+    engine.close()
 
 
 if __name__ == "__main__":

@@ -1,4 +1,13 @@
+from repro.serving.admission import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionController,
+    AdmissionStats,
+    AdmissionTicket,
+    EngineOverloadedError,
+)
 from repro.serving.engine import (  # noqa: F401
+    RequestCancelled,
+    ResponseFuture,
     SummarizationEngine,
     SummarizeRequest,
     SummarizeResponse,

@@ -1,0 +1,251 @@
+"""SLO-aware admission control for the continuous serving engine.
+
+The drain policies (``repro.farm``) decide WHEN queued work launches; this
+module decides WHETHER work is allowed to queue at all.  An
+:class:`AdmissionController` sits between ``SummarizationEngine.submit()``
+and the solver backend and applies two checks per request:
+
+* **Queue depth** -- ``max_queue_depth`` is a hard cap on requests admitted
+  but not yet finished.  At the cap, submission raises
+  :class:`EngineOverloadedError` (load shedding: the caller retries or
+  routes elsewhere), which is what lets the deadline drain policy actually
+  meet its watermarks at saturation -- an unbounded queue makes every
+  deadline infeasible eventually no matter how drains are scheduled.
+
+* **Deadline feasibility** -- for requests carrying a deadline, the
+  controller estimates the completion time of everything already admitted
+  plus this request, reusing the farm's shape-only packing estimator
+  (:func:`repro.farm.packing.estimate_packing` over per-job lane counts,
+  replica-tiered exactly like a real drain) against the simulated hardware
+  clock.  An infeasible request is rejected -- or, under
+  ``overload="degrade"``, retried at ``reads_floor`` anneal reads (less chip
+  time per job, a cheaper but lower-quality solve) and admitted degraded if
+  that fits.
+
+``overload="degrade"`` also floors the reads of any request admitted while
+the queue sits above ``degrade_depth`` (default: half the cap), trading
+summary quality for sustained goodput before the hard cap starts shedding.
+Both checks are estimates on the SIMULATED clock -- they bound queued chip
+work, not host wall time.  Admission never changes results of admitted
+requests beyond the ``reads`` knob: jobs draw from their own keys, so a
+request admitted with its requested reads is bit-identical under any
+admission configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, List, Optional, Sequence
+
+from repro.farm.packing import estimate_packing, replica_tiers
+
+
+class EngineOverloadedError(RuntimeError):
+    """Submission rejected by admission control (queue full, or the
+    request's deadline is infeasible given already-admitted work)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Knobs of the admission layer (``None`` depth = no bound).
+
+    ``overload`` picks the response when a check fails: ``"reject"`` raises
+    :class:`EngineOverloadedError`; ``"degrade"`` first retries the request
+    at ``reads_floor`` reads and only rejects if even that cannot meet the
+    deadline (the depth cap always rejects -- shrinking reads cannot shrink
+    the queue).  ``deadline_watermark`` is the safety margin (simulated
+    seconds) the completion estimate must clear; generous margins absorb the
+    estimate's optimism about drain slicing."""
+
+    max_queue_depth: Optional[int] = None
+    overload: str = "reject"  # "reject" | "degrade"
+    reads_floor: int = 2
+    degrade_depth: Optional[int] = None  # default: max_queue_depth // 2
+    deadline_watermark: float = 0.0
+    # Gate deadline-carrying requests on the packing-estimate feasibility
+    # check.  Off for the engine's default (admit-everything) controller:
+    # stamping a deadline on a request must not start shedding load unless
+    # the operator opted into admission control.
+    deadline_feasibility: bool = True
+
+    def __post_init__(self):
+        if self.overload not in ("reject", "degrade"):
+            raise ValueError(
+                f"overload must be 'reject' or 'degrade', got {self.overload!r}"
+            )
+        if self.reads_floor < 1:
+            raise ValueError(f"reads_floor must be >= 1, got {self.reads_floor}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionTicket:
+    """Outcome of one admitted request."""
+
+    request_id: int
+    reads: int  # effective reads (== requested unless degraded)
+    degraded: bool
+    est_completion: float  # estimated sim-clock completion (0 if unknown)
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    admitted: int = 0
+    rejected: int = 0
+    degraded: int = 0
+    depth: int = 0  # requests currently admitted-but-unfinished
+    peak_depth: int = 0
+
+
+class AdmissionController:
+    """Tracks admitted-but-unfinished work and gates new submissions.
+
+    ``lanes_per_chip`` / ``n_chips`` / ``seconds_per_solve`` describe the
+    backend's packing geometry (taken from the farm; ``None`` for host
+    backends, which disables the deadline-feasibility estimate and leaves
+    only the depth cap).  Thread-safe: ``admit`` may race with ``on_done``
+    from the engine's driver thread.
+    """
+
+    def __init__(
+        self,
+        config: Optional[AdmissionConfig] = None,
+        *,
+        lanes_per_chip: Optional[int] = None,
+        n_chips: int = 1,
+        seconds_per_solve: float = 0.0,
+        replica_bucket: int = 8,
+        tier_ratio: float = 2.0,
+    ):
+        self.config = config or AdmissionConfig()
+        self.lanes_per_chip = lanes_per_chip
+        self.n_chips = max(1, n_chips)
+        self.seconds_per_solve = seconds_per_solve
+        self.replica_bucket = replica_bucket
+        self.tier_ratio = tier_ratio
+        self._lock = threading.Lock()
+        # request_id -> list of (lanes, reads) for every planned solve job.
+        self._inflight: Dict[int, List[tuple]] = {}
+        self._stats = AdmissionStats()
+
+    # ------------------------------------------------------------------ API
+
+    def admit(
+        self,
+        request_id: int,
+        job_lanes: Sequence[int],
+        reads: int,
+        deadline: Optional[float],
+        sim_now: float,
+    ) -> AdmissionTicket:
+        """Gate one request carrying ``len(job_lanes)`` planned solve jobs.
+
+        Returns a ticket with the effective ``reads`` or raises
+        :class:`EngineOverloadedError`.  ``job_lanes`` are the estimated spin
+        counts of the request's solve jobs (iterations x decomposition
+        windows); ``sim_now`` is the backend's current simulated clock.
+        """
+        cfg = self.config
+        with self._lock:
+            depth = len(self._inflight)
+            if cfg.max_queue_depth is not None and depth >= cfg.max_queue_depth:
+                self._stats.rejected += 1
+                raise EngineOverloadedError(
+                    f"admission queue full: {depth} requests in flight "
+                    f"(max_queue_depth={cfg.max_queue_depth})"
+                )
+            eff_reads, degraded = reads, False
+            if cfg.overload == "degrade":
+                # degrade_depth works standalone: an operator may want
+                # quality degradation with no hard shedding cap at all.
+                soft = (cfg.degrade_depth if cfg.degrade_depth is not None
+                        else (cfg.max_queue_depth or 0) // 2)
+                if soft > 0 and depth >= soft:
+                    eff_reads = min(reads, cfg.reads_floor)
+                    degraded = eff_reads < reads
+            est = 0.0
+            if (deadline is not None and cfg.deadline_feasibility
+                    and self.lanes_per_chip):
+                est = self._estimate_completion_locked(
+                    job_lanes, eff_reads, sim_now
+                )
+                if est > deadline - cfg.deadline_watermark:
+                    if cfg.overload == "degrade" and eff_reads > cfg.reads_floor:
+                        eff_reads = cfg.reads_floor
+                        est = self._estimate_completion_locked(
+                            job_lanes, eff_reads, sim_now
+                        )
+                        degraded = est <= deadline - cfg.deadline_watermark
+                    if est > deadline - cfg.deadline_watermark:
+                        self._stats.rejected += 1
+                        raise EngineOverloadedError(
+                            f"deadline infeasible: estimated completion "
+                            f"{est:.6f}s (sim) > deadline {deadline:.6f}s - "
+                            f"watermark {cfg.deadline_watermark:.6f}s with "
+                            f"{depth} requests in flight"
+                        )
+            self._inflight[request_id] = [(int(n), eff_reads)
+                                          for n in job_lanes]
+            self._stats.admitted += 1
+            if degraded:
+                self._stats.degraded += 1
+            self._stats.depth = len(self._inflight)
+            self._stats.peak_depth = max(self._stats.peak_depth,
+                                         self._stats.depth)
+            return AdmissionTicket(request_id, eff_reads, degraded, est)
+
+    def on_done(self, request_id: int) -> None:
+        """Release a request's admitted work (completion, failure, cancel)."""
+        with self._lock:
+            self._inflight.pop(request_id, None)
+            self._stats.depth = len(self._inflight)
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def is_active(self, request_id: int) -> bool:
+        """True while ``request_id`` is admitted-but-unfinished (used by the
+        engine to keep batch ids from colliding with live submit() traffic)."""
+        with self._lock:
+            return request_id in self._inflight
+
+    def stats(self) -> AdmissionStats:
+        with self._lock:
+            return dataclasses.replace(self._stats)
+
+    # ------------------------------------------------------------ internals
+
+    def _estimate_completion_locked(
+        self, job_lanes: Sequence[int], reads: int, sim_now: float
+    ) -> float:
+        """Sim-clock completion estimate for admitted work + this request.
+
+        Mirrors a drain PER REQUEST: each request's jobs tier by read count
+        (``replica_tiers``), each tier BFD-packs (``estimate_packing``), bins
+        round-robin over chips, a bin occupies its chip for ``tier_reads *
+        seconds_per_solve``; the per-request latencies then SUM.  Assuming
+        every inflight request drains alone is deliberately pessimistic: the
+        engine's continuous driver adopts arrivals between rounds, so a
+        burst's drains slice the queue into arrival-order fragments, and any
+        cross-request packing a real drain achieves only finishes earlier
+        than this bound.  (Decomposed requests submit window waves that can
+        fragment further; ``deadline_watermark`` is the margin for that.)
+        """
+        per_request = [list(jobs) for jobs in self._inflight.values()]
+        per_request.append([(int(n), reads) for n in job_lanes])
+        total = 0.0
+        for jobs in per_request:
+            if not jobs:
+                continue
+            sizes = [n for n, _ in jobs]
+            tiers = replica_tiers([r for _, r in jobs],
+                                  bucket=self.replica_bucket,
+                                  ratio=self.tier_ratio)
+            for tier_reads, idxs in tiers:
+                est = estimate_packing([sizes[i] for i in idxs],
+                                       self.lanes_per_chip)
+                cycles = math.ceil(est.n_bins / self.n_chips)
+                total += cycles * tier_reads * self.seconds_per_solve
+        return sim_now + total

@@ -1,56 +1,91 @@
-"""Serving engine: batched summarization requests through the full stack.
+"""Continuous serving engine: enqueueing submit(), one driver loop, SLO-aware
+admission.
 
 Request -> sentence split -> embed (backbone or hashed BoW) -> improved Ising
 -> decomposition if oversized -> stochastic-rounding iterations on the
-selected solver (COBI sim by default) -> M-sentence summary.
+selected solver backend -> M-sentence summary.
 
-For the COBI solver the engine is genuinely batched end-to-end: every
-request is a generator that submits its anneal jobs (ALL planned
-decomposition windows of the request, speculated ahead by the pipelined
-window planner) to a shared :class:`repro.farm.CobiFarm` and yields; the
-engine drives all requests in lockstep.  Under the farm's default
-``policy="manual"`` the engine supplies the round barrier, draining the farm
-ONCE per round so jobs from different requests are packed onto the same
-virtual chips and annealed by one batched Pallas launch.  Under a background
-drain policy (``policy="bin-full"``/``"deadline"``/``"timer"``) the engine
-stops draining entirely: the farm's drive loop fires drains as bins fill /
-deadlines approach / the timer ticks, and the request generators simply
-block on their futures.  Results are bit-identical across policies.
+The serving surface is **continuous**, not batch-shaped:
 
-Jobs go in with ``reduce="best"``: the fused
-anneal→readout→best-of epilogue selects each iteration's winning read ON
-DEVICE, so a drain ships O(lanes) per super-instance back to the engine
-instead of every replica's spins.  Per-request latency/energy come from the
-farm's job receipts (the paper's 200 us / 25 mW hardware model); non-COBI
-solvers keep the per-invocation hardware model."""
+* ``submit()`` is a real enqueue.  It runs admission control, assigns the
+  request id, stamps the per-request PRNG key, and returns a
+  :class:`ResponseFuture` (``result(timeout=)``, ``add_done_callback``,
+  ``cancel()``, ``await`` -- the ``FarmFuture`` contract, one level up).
+* A background **driver thread** owns all in-flight requests.  Each request
+  is a generator that submits its solve jobs (ALL planned decomposition
+  windows, speculated ahead by the pipelined window planner) to the engine's
+  :class:`repro.solvers.base.SolverBackend` and yields; the driver steps
+  every active generator, so jobs from concurrently-resident requests pack
+  into the same backend rounds.  Under the COBI farm's ``policy="manual"``
+  the driver supplies the round barrier (ONE ``drain()`` per round packs all
+  requests' jobs onto shared virtual chips); under a background drain policy
+  (``"bin-full"``/``"deadline"``/``"timer"``) or a self-draining host
+  thread-pool backend it never drains -- generators just block on their
+  futures.  Results are bit-identical across policies and across arrival
+  interleavings: every job solves from its own key.
+* ``run_batch()`` and ``stream()`` are thin wrappers over the same loop:
+  enqueue everything, then wait (in order) or yield (in completion order).
+  ``run_batch(requests, seed=s)`` reproduces the legacy lockstep results
+  bit-for-bit: per-request keys are ``fold_in(key(s), request_id)``, and the
+  engine owns id assignment -- duplicate or unset (``<= 0``) caller ids are
+  remapped to fresh engine ids instead of silently colliding.
+* An :class:`repro.serving.admission.AdmissionController` sits between
+  ``submit()`` and the backend: a hard queue-depth cap and an
+  ``estimate_packing``-based deadline-feasibility check on the simulated
+  clock, with configurable overload behaviour -- reject
+  (:class:`EngineOverloadedError`) or degrade ``reads`` to a floor -- so the
+  farm's deadline drain policy can actually meet its watermarks at
+  saturation instead of watching an unbounded queue blow every deadline.
+
+Jobs go in with ``reduce="best"`` (the COBI farm's fused
+anneal->readout->best-of epilogue selects each iteration's winning read ON
+DEVICE; host backends reduce in the worker).  Per-request latency, energy
+and attributed h2d/d2h transfer bytes come from the backend's job receipts
+(the paper's 200 us / 25 mW hardware model); host-solver backends report
+zero receipts and fall back to the per-invocation hardware model.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
 import time
-from typing import List, Optional, Sequence
+import traceback
+from typing import Iterable, List, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core import SolveConfig, solve_es
+from repro.core import SolveConfig
 from repro.core.hardware import COBI, TABU_CPU
 from repro.core.metrics import normalized_objective, reference_bounds
-from repro.core.pipeline import iter_solve_es
+from repro.core.pipeline import iter_solve_es, solve_es
 from repro.data.text import split_sentences
 from repro.embeddings import HashedBowEncoder, problem_from_sentences
 from repro.farm import CobiFarm
+from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.solvers.base import AwaitableFuture, ThreadPoolBackend
 from repro.solvers.cobi import COBI_MAX_SPINS
+
+# Solvers served through a backend's submit->future loop; the rest (brute /
+# exact / random baselines) run inline in the driver thread via solve_es.
+_POOL_SOLVERS = ("tabu", "sa")
+
+
+class RequestCancelled(RuntimeError):
+    """The request was cancelled before the driver picked it up."""
 
 
 @dataclasses.dataclass
 class SummarizeRequest:
     text: str
     m: int = 6
-    request_id: int = 0
+    request_id: int = 0  # <= 0 means "unassigned": the engine assigns one
     priority: int = 0
     # Absolute simulated-clock deadline stamped on the request's farm jobs;
-    # the farm's policy="deadline" watermark trigger keys on it.
+    # the farm's policy="deadline" watermark trigger and the engine's
+    # admission feasibility check both key on it.
     deadline: Optional[float] = None
 
 
@@ -65,6 +100,60 @@ class SummarizeResponse:
     projected_solver_seconds: float  # hardware model (COBI 200us/solve etc.)
     projected_energy_joules: float
     solver_invocations: int
+    # Host<->device transfer attributed to this request's jobs by lane share
+    # of each drain launch (0 for host-solver backends) -- the SLO view of
+    # what the request cost beyond chip time.
+    bytes_h2d: int = 0
+    bytes_d2h: int = 0
+    sim_completed: float = 0.0  # absolute sim-clock finish of the last job
+    # deadline_met is None when the request had no deadline or no simulated
+    # hardware served it (host backends have no sim clock).
+    deadline_met: Optional[bool] = None
+    reads_used: int = 0  # effective anneal reads (< requested when degraded)
+    degraded: bool = False  # admission floored the reads under overload
+
+
+class ResponseFuture(AwaitableFuture):
+    """Thread-safe, awaitable handle to one submitted request.
+
+    The ``FarmFuture`` contract one level up (machinery shared via
+    :class:`repro.solvers.base.AwaitableFuture`): ``result(timeout=)``
+    blocks until the driver finishes the request; ``add_done_callback`` runs
+    from the driver thread (immediately if already done); ``cancel()``
+    succeeds only while the request is still queued (the driver has not
+    started it); ``await future`` suspends the running asyncio task.
+    """
+
+    __slots__ = ("request_id", "_engine")
+
+    def __init__(self, engine: "SummarizationEngine", request_id: int):
+        super().__init__()
+        self.request_id = request_id
+        self._engine = engine
+
+    def _describe(self) -> str:
+        return f"request {self.request_id}"
+
+    def result(self, timeout: Optional[float] = None) -> SummarizeResponse:
+        return super().result(timeout)
+
+    def cancel(self) -> bool:
+        """Dequeue the request if the driver has not started it; True on
+        success (the future is then done and ``result()`` raises
+        :class:`RequestCancelled`)."""
+        return self._engine._cancel(self)
+
+
+@dataclasses.dataclass
+class _Work:
+    """One admitted request waiting for (or owned by) the driver."""
+
+    req: SummarizeRequest
+    key: jax.Array
+    sents: List[str]
+    reads: int  # effective reads from admission (== cfg.reads unless degraded)
+    degraded: bool
+    future: ResponseFuture
 
 
 class SummarizationEngine:
@@ -78,110 +167,325 @@ class SummarizationEngine:
         farm: Optional[CobiFarm] = None,
         n_chips: int = 4,
         policy: str = "manual",
+        backend=None,
+        pool_workers: int = 4,
+        admission: Optional[AdmissionConfig] = None,
+        seed: int = 0,
     ):
-        """``farm`` injects a shared chip farm; by default a fresh
-        ``CobiFarm(n_chips, policy=policy)`` is built for the COBI solver.
-        ``n_chips=0`` disables the farm (legacy sequential per-request
-        solving).  A non-manual ``policy`` makes the farm self-draining:
-        the engine never calls ``drain()`` and futures resolve from the
-        farm's background drive loop (tune linger/timer knobs by injecting
-        a pre-built farm)."""
+        """``backend`` injects any :class:`repro.solvers.base.SolverBackend`.
+        By default the COBI solver gets a ``CobiFarm(n_chips, policy=policy)``
+        (``farm=`` injects a pre-built one; ``n_chips=0`` disables it -- legacy
+        sequential per-request solving) and tabu/SA get a
+        :class:`ThreadPoolBackend` with ``pool_workers`` threads
+        (``pool_workers=0`` disables it).  A non-manual ``policy`` makes the
+        farm self-draining: the driver never calls ``drain()`` and futures
+        resolve from the farm's background drive loop.  ``admission``
+        configures the submit-side admission layer (default: admit
+        everything).  ``seed`` keys the continuous ``submit()`` path: request
+        ``r``'s key is ``fold_in(key(seed), r)``, so a ``run_batch`` with the
+        same seed and the same engine-assigned ids is bit-identical."""
         self.cfg = solve_cfg or SolveConfig(
             solver="cobi", iterations=6, reads=8, int_range=14
         )
         self.encoder = encoder or HashedBowEncoder()
         self.lam = lam
         self.score = score_against_exact
-        if farm is None and n_chips > 0 and self.cfg.solver == "cobi":
+        if farm is None and backend is None and n_chips > 0 \
+                and self.cfg.solver == "cobi":
             farm = CobiFarm(n_chips, policy=policy)
         self.farm = farm
+        if backend is not None:
+            self.backend = backend
+        elif farm is not None and self.cfg.solver == "cobi":
+            self.backend = farm
+        elif self.cfg.solver in _POOL_SOLVERS and pool_workers > 0:
+            self.backend = ThreadPoolBackend(self.cfg.solver,
+                                             workers=pool_workers)
+        else:
+            self.backend = None
+        if admission is None:  # default: admit everything, just count it
+            admission = AdmissionConfig(deadline_feasibility=False)
+        self.admission = AdmissionController(
+            admission,
+            lanes_per_chip=getattr(self.backend, "lanes_per_chip", None),
+            n_chips=getattr(self.backend, "n_chips", 1),
+            seconds_per_solve=getattr(
+                getattr(self.backend, "hardware", None), "seconds_per_solve", 0.0
+            ),
+        )
+        self._seed = seed
+        self._base_key = jax.random.key(seed)
         self._counter = 0
+        self._lock = threading.RLock()
+        self._new = threading.Condition(self._lock)
+        self._queue: List[_Work] = []
+        self._driver: Optional[threading.Thread] = None
+        self._closed = False
 
     def _hardware(self):
         return COBI if self.cfg.solver == "cobi" else TABU_CPU
 
-    def submit(self, text: str, m: int = 6, priority: int = 0,
-               deadline: Optional[float] = None) -> SummarizeRequest:
-        self._counter += 1
-        return SummarizeRequest(text=text, m=m, request_id=self._counter,
-                                priority=priority, deadline=deadline)
+    # ------------------------------------------------------------------ API
 
-    def close(self) -> None:
-        """Stop the farm's background drive loop (no-op without a farm)."""
-        if self.farm is not None:
-            self.farm.close()
+    def submit(self, text: str, m: int = 6, priority: int = 0,
+               deadline: Optional[float] = None) -> ResponseFuture:
+        """Enqueue one request; returns an awaitable :class:`ResponseFuture`.
+
+        Runs admission control first: raises :class:`EngineOverloadedError`
+        when the queue-depth cap is hit or the deadline is infeasible (or
+        admits with degraded ``reads`` under ``overload="degrade"``).  The
+        request id is engine-assigned; its PRNG key is
+        ``fold_in(key(engine seed), id)``.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            rid = self._next_rid_locked()
+        req = SummarizeRequest(text=text, m=m, request_id=rid,
+                               priority=priority, deadline=deadline)
+        return self._enqueue(req, jax.random.fold_in(self._base_key, rid))
 
     def run_batch(self, requests: Sequence[SummarizeRequest], seed: int = 0
                   ) -> List[SummarizeResponse]:
-        """Serve a batch: all requests' subproblems share the farm's packed
-        anneals round by round (decomposition windows advance in lockstep)."""
+        """Serve a batch through the continuous driver; blocks until done.
+
+        Thin wrapper over the ``submit()`` machinery: every request is
+        enqueued (admission-controlled) and the call waits for all futures in
+        order.  Requests with duplicate or unset (``<= 0``) ids are remapped
+        to fresh engine-assigned ids -- the engine owns id assignment, so two
+        hand-built requests can no longer silently share a PRNG key.  All
+        requests' subproblems share the backend's packed rounds, exactly like
+        the legacy lockstep loop (bit-identical for the same seed and ids).
+        """
+        return [f.result() for f in self._enqueue_batch(requests, seed)]
+
+    def stream(self, requests: Iterable[SummarizeRequest], seed: int = 0):
+        """Serve requests, yielding responses in COMPLETION order.
+
+        The streaming face of the same driver loop: everything is enqueued
+        up front (id remapping and admission as in :meth:`run_batch`), then
+        responses are yielded as their futures resolve -- a fast small
+        request is not stuck behind a slow oversized one.  A failed request
+        raises when its turn to yield comes.
+        """
+        import queue as queue_mod
+
+        done_q: "queue_mod.Queue[ResponseFuture]" = queue_mod.Queue()
+        futures = self._enqueue_batch(list(requests), seed)
+        for fut in futures:
+            fut.add_done_callback(done_q.put)
+        for _ in range(len(futures)):
+            yield done_q.get().result()
+
+    def close(self) -> None:
+        """Finish queued/in-flight work, stop the driver, close the backend.
+
+        Idempotent and safe with work still queued: the driver loop keeps
+        serving until both its queue and its active set are empty, THEN
+        exits; only afterwards is the backend shut down.  ``submit`` raises
+        after close."""
+        with self._new:
+            already = self._closed
+            self._closed = True
+            driver, self._driver = self._driver, None
+            self._new.notify_all()
+        if driver is not None:
+            driver.join(timeout=600.0)
+        if not already and self.backend is not None:
+            self.backend.close()
+
+    def __enter__(self) -> "SummarizationEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ internals
+
+    def _enqueue_batch(self, requests: Sequence[SummarizeRequest], seed: int
+                       ) -> List[ResponseFuture]:
+        """Admit + enqueue a whole batch ATOMICALLY: the driver adopts all of
+        it in one round, so the batch's jobs pack into shared drains exactly
+        like the legacy lockstep loop (per-request enqueueing would let the
+        driver race ahead and fragment the first rounds' bins)."""
         base = jax.random.key(seed)
-        # Keyed by batch position: request_ids are caller-provided and may
-        # collide (e.g. hand-built requests all defaulting to 0).
-        drivers = {
-            i: self._iter_one(req, jax.random.fold_in(base, req.request_id))
-            for i, req in enumerate(requests)
-        }
-        responses: dict = {}
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            seen: set = set()
+            resolved = []
+            for req in requests:
+                rid = req.request_id
+                if rid <= 0 or rid in seen or self.admission.is_active(rid):
+                    rid = self._next_rid_locked(seen)
+                seen.add(rid)
+                if rid != req.request_id:
+                    req = dataclasses.replace(req, request_id=rid)
+                resolved.append(req)
+        works: List[_Work] = []
         try:
-            while drivers:
-                still_running = {}
-                for i, gen in drivers.items():
-                    try:
-                        next(gen)
-                        still_running[i] = gen
-                    except StopIteration as done:
-                        responses[i] = done.value
-                if still_running and self.farm is not None:
-                    if self.farm.policy == "manual":
-                        # Manual policy: the engine IS the round barrier.
-                        self.farm.drain()
-                    else:
-                        # Background policies: the farm drains itself;
-                        # the engine only tells it this round's burst is
-                        # over (non-blocking -- the drive loop flushes
-                        # while the resumed generators reduce), and the
-                        # generators block on their futures.
-                        self.farm.flush_hint()
-                drivers = still_running
-        finally:
-            if self.farm is not None:
-                # Every future from this batch has been consumed; drop the
-                # completed-job buffers so a long-lived engine stays bounded.
-                self.farm.clear_completed()
-        return [responses[i] for i in range(len(requests))]
+            for req in resolved:
+                works.append(
+                    self._admit_work(req, jax.random.fold_in(base, req.request_id))
+                )
+        except BaseException:
+            for work in works:  # released admitted-but-never-queued work
+                self.admission.on_done(work.req.request_id)
+            raise
+        self._enqueue_works(works)
+        return [w.future for w in works]
 
-    def _run_one(self, req: SummarizeRequest, key) -> SummarizeResponse:
-        gen = self._iter_one(req, key)
+    def _enqueue(self, req: SummarizeRequest, key) -> ResponseFuture:
+        work = self._admit_work(req, key)
+        self._enqueue_works([work])
+        return work.future
+
+    def _next_rid_locked(self, taken: Sequence[int] = ()) -> int:
+        """Next engine-assigned request id (caller holds ``self._lock``).
+
+        Skips ids in ``taken`` (the batch being resolved) AND ids of
+        admitted-but-unfinished requests -- a caller-provided explicit batch
+        id never advances the counter, so without the skip a later
+        ``submit()`` could mint an id colliding with live traffic and corrupt
+        the admission depth accounting."""
         while True:
-            try:
-                next(gen)
-            except StopIteration as done:
-                return done.value
-            if self.farm is not None and self.farm.policy == "manual":
-                self.farm.drain()
+            self._counter += 1
+            rid = self._counter
+            if rid not in taken and not self.admission.is_active(rid):
+                return rid
 
-    def _iter_one(self, req: SummarizeRequest, key):
-        """Generator serving one request; yields once per farm round."""
-        t0 = time.perf_counter()
+    def _admit_work(self, req: SummarizeRequest, key) -> _Work:
         sents = split_sentences(req.text)
+        ticket = self.admission.admit(
+            req.request_id,
+            self._estimate_job_lanes(len(sents), req.m),
+            self.cfg.reads,
+            req.deadline,
+            self.backend.sim_now() if self.backend is not None else 0.0,
+        )
+        return _Work(req=req, key=key, sents=sents, reads=ticket.reads,
+                     degraded=ticket.degraded,
+                     future=ResponseFuture(self, req.request_id))
+
+    def _enqueue_works(self, works: List[_Work]) -> None:
+        with self._new:
+            if self._closed:
+                for work in works:
+                    self.admission.on_done(work.req.request_id)
+                raise RuntimeError("engine is closed")
+            self._queue.extend(works)
+            if self._driver is None:
+                self._driver = threading.Thread(
+                    target=self._drive, name="summarize-engine-drive",
+                    daemon=True,
+                )
+                self._driver.start()
+            self._new.notify_all()
+
+    def _estimate_job_lanes(self, n_sents: int, m: int) -> List[int]:
+        """Planned solve-job spin counts for admission's packing estimate.
+
+        One Ising spin per sentence; an oversized request decomposes into
+        p-sentence windows, each solve removing ``p - q`` sentences, plus the
+        final window.  Every window costs ``cfg.iterations`` solve jobs.
+        """
+        if n_sents <= m:
+            return []
+        cfg = self.cfg
+        max_spins = COBI_MAX_SPINS if cfg.solver == "cobi" else cfg.p
+        if n_sents > max_spins or (cfg.decompose and n_sents > cfg.p):
+            windows = 1 + math.ceil(max(0, n_sents - cfg.p) / (cfg.p - cfg.q))
+            return [cfg.p] * (windows * cfg.iterations)
+        return [n_sents] * cfg.iterations
+
+    def _cancel(self, future: ResponseFuture) -> bool:
+        with self._new:
+            for i, work in enumerate(self._queue):
+                if work.future is future:
+                    del self._queue[i]
+                    break
+            else:
+                return False
+        self.admission.on_done(future.request_id)
+        future._finish(None, RequestCancelled(
+            f"request {future.request_id} was cancelled before serving"
+        ))
+        return True
+
+    def _drive(self) -> None:
+        """Driver loop: adopt queued requests, step every active generator
+        once per round, supply the manual-policy round barrier, resolve
+        futures.  Runs until the engine is closed AND no work remains."""
+        active: List[tuple] = []  # (generator, work)
+        while True:
+            with self._new:
+                while not self._queue and not active and not self._closed:
+                    self._new.wait()
+                if self._closed and not self._queue and not active:
+                    return
+                batch, self._queue = self._queue, []
+            for work in batch:
+                active.append((self._iter_one(work), work))
+            still: List[tuple] = []
+            for gen, work in active:
+                try:
+                    next(gen)
+                    still.append((gen, work))
+                except StopIteration as done:
+                    self._resolve(work, done.value)
+                except BaseException as exc:  # noqa: BLE001 -- fail request
+                    self._resolve(work, None, exc)
+            active = still
+            if active and self.backend is not None:
+                try:
+                    if self.backend.policy == "manual":
+                        # Manual policy: the driver IS the round barrier --
+                        # one drain packs every active request's jobs.
+                        self.backend.drain()
+                    else:
+                        # Self-draining backends: tell the drive loop this
+                        # round's burst is over (non-blocking); generators
+                        # block on their futures.
+                        self.backend.flush_hint()
+                except Exception:  # noqa: BLE001
+                    # The backend already failed the affected job futures;
+                    # the corresponding generators surface the error on
+                    # their next step.  The driver must outlive it.
+                    traceback.print_exc()
+
+    def _resolve(self, work: _Work, response: Optional[SummarizeResponse],
+                 error: Optional[BaseException] = None) -> None:
+        self.admission.on_done(work.req.request_id)
+        if response is not None:
+            response.degraded = work.degraded
+        work.future._finish(response, error)
+
+    def _iter_one(self, work: _Work):
+        """Generator serving one request; yields once per backend round."""
+        req = work.req
+        t0 = time.perf_counter()
+        sents = work.sents
+        cfg = self.cfg
+        if work.reads != cfg.reads:
+            cfg = dataclasses.replace(cfg, reads=work.reads)
         if len(sents) <= req.m:
             return SummarizeResponse(
                 req.request_id, sents, np.ones(len(sents), np.int32),
                 0.0, None, time.perf_counter() - t0, 0.0, 0.0, 0,
+                reads_used=cfg.reads,
             )
         problem = problem_from_sentences(sents, req.m, lam=self.lam,
                                          encoder=self.encoder)
-        cfg = self.cfg
         if problem.n > COBI_MAX_SPINS and not cfg.decompose:
             cfg = dataclasses.replace(cfg, decompose=True)
-        if self.farm is not None and cfg.solver == "cobi":
+        if self.backend is not None:
             report = yield from iter_solve_es(
-                problem, key, cfg, farm=self.farm, priority=req.priority,
-                deadline=req.deadline,
+                problem, work.key, cfg, backend=self.backend,
+                priority=req.priority, deadline=req.deadline,
+                tag=req.request_id,
             )
         else:
-            report = solve_es(problem, key, cfg)
+            report = solve_es(problem, work.key, cfg)
         hw = self._hardware()
         host_eval = report.solver_invocations * cfg.reads * hw.host_eval_seconds
         if report.chip_seconds > 0.0:  # farm receipts: lane-shared chip time
@@ -199,6 +503,9 @@ class SummarizationEngine:
             normalized = float(
                 normalized_objective(report.objective, reference_bounds(problem))
             )
+        deadline_met = None
+        if req.deadline is not None and report.sim_completed > 0.0:
+            deadline_met = report.sim_completed <= req.deadline
         summary = [sents[i] for i in np.nonzero(report.selection)[0]]
         return SummarizeResponse(
             request_id=req.request_id,
@@ -210,4 +517,9 @@ class SummarizationEngine:
             projected_solver_seconds=t_solver,
             projected_energy_joules=e_solver,
             solver_invocations=report.solver_invocations,
+            bytes_h2d=report.bytes_h2d,
+            bytes_d2h=report.bytes_d2h,
+            sim_completed=report.sim_completed,
+            deadline_met=deadline_met,
+            reads_used=cfg.reads,
         )

@@ -1,2 +1,12 @@
 from repro.solvers import brute, cobi, greedy, random_baseline, sa, tabu  # noqa: F401
-from repro.solvers.base import SolverResult  # noqa: F401
+from repro.solvers.base import (  # noqa: F401
+    ISING_SOLVER_NAMES,
+    PoolFuture,
+    PoolJobCancelled,
+    PoolReceipt,
+    SolverBackend,
+    SolverFuture,
+    SolverResult,
+    ThreadPoolBackend,
+    ising_solver,
+)

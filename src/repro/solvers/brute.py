@@ -71,6 +71,41 @@ def brute_force_select(problem: EsProblem) -> Tuple[np.ndarray, float, int]:
     return x[hi], float(objs[hi]), x.shape[0]
 
 
+def solve_ising(ising, key=None, *, reads: int = 8, steps: int = 400,
+                check: bool = False, reduce: str = "none", chunk: int = 1 << 18):
+    """Exact Ising minimum by chunked 2^N enumeration (N <= 22), as a
+    :class:`repro.solvers.base.SolverResult` with a single "read".
+
+    The uniform registry entry point (``repro.solvers.base.ising_solver``)
+    for ``solver="brute"`` at the Ising level -- it lets the brute-force
+    baseline serve through the same backend loop as tabu/SA/COBI.  ``key``,
+    ``reads``, ``steps``, ``check`` and ``reduce`` are accepted for signature
+    compatibility; enumeration is deterministic and already a single best
+    configuration, so they change nothing.
+    """
+    from repro.solvers.base import SolverResult
+
+    del key, reads, steps, check, reduce
+    h = np.asarray(ising.h, np.float32)
+    j = np.asarray(ising.j, np.float32)
+    n = h.shape[0]
+    if n > 22:
+        raise ValueError(f"brute Ising enumeration supports N <= 22, got {n}")
+    best_e, best_s = np.inf, None
+    for start in range(0, 2**n, chunk):
+        idx = np.arange(start, min(start + chunk, 2**n), dtype=np.int64)
+        spins = (((idx[:, None] >> np.arange(n)[None, :]) & 1) * 2 - 1).astype(
+            np.float32
+        )
+        e = spins @ h + np.einsum("ri,ri->r", spins @ j, spins)
+        i = int(np.argmin(e))
+        if e[i] < best_e:
+            best_e, best_s = float(e[i]), spins[i].astype(np.int8)
+    return SolverResult(
+        spins=best_s[None, :], energies=np.asarray([best_e], np.float32)
+    )
+
+
 def exact_qubo_min(q: np.ndarray, chunk: int = 1 << 18) -> Tuple[np.ndarray, float]:
     """Exact unconstrained QUBO minimum by 2^N enumeration (N <= 22), chunked."""
     q = np.asarray(q, np.float32)

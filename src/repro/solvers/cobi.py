@@ -52,6 +52,9 @@ def solve(
     ``reduce="none"`` returns all reads (caller keeps best); ``"best"``
     returns only the argmin-energy read via the fused on-device epilogue
     (spins (1, N), energies (1,)); ``"topk"`` the k best reads ascending.
+    This is also the ``"cobi"`` entry point of the
+    ``repro.solvers.base.ising_solver`` registry (uniform
+    ``(ising, key, *, reads, steps, check, reduce)`` call surface).
     """
     if check:
         check_programmable(ising)

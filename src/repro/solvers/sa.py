@@ -76,3 +76,20 @@ def solve(
         t_hi = float(2.0 * np.abs(np.asarray(ising.j)).sum(-1).max() + 1e-6)
     spins, energies = _sa(ising.h, ising.j, key, replicas, sweeps, t_hi, t_lo)
     return SolverResult(spins=spins, energies=energies)
+
+
+def solve_ising(
+    ising: IsingProblem,
+    key: Array,
+    *,
+    reads: int = 8,
+    steps: int = 400,
+    check: bool = False,
+    reduce: str = "none",
+    **kwargs,
+) -> SolverResult:
+    """Uniform registry entry point (see ``repro.solvers.base.ising_solver``):
+    ``reads`` maps to replicas; ``steps``/``check`` have no SA meaning and
+    are ignored; extra kwargs (``sweeps``, ``t_hi``, ``t_lo``) pass through."""
+    del steps, check
+    return solve(ising, key, replicas=reads, **kwargs).reduced(reduce)

@@ -86,3 +86,20 @@ def solve(
     tenure = tenure if tenure is not None else max(3, n // 4)
     spins, energies = _tabu(ising.h, ising.j, key, replicas, iters, tenure)
     return SolverResult(spins=spins, energies=energies)
+
+
+def solve_ising(
+    ising: IsingProblem,
+    key: Array,
+    *,
+    reads: int = 8,
+    steps: int = 400,
+    check: bool = False,
+    reduce: str = "none",
+    **kwargs,
+) -> SolverResult:
+    """Uniform registry entry point (see ``repro.solvers.base.ising_solver``):
+    ``reads`` maps to replicas; ``steps``/``check`` have no tabu meaning and
+    are ignored; extra kwargs (``iters``, ``tenure``) pass through."""
+    del steps, check
+    return solve(ising, key, replicas=reads, **kwargs).reduced(reduce)

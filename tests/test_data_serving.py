@@ -64,37 +64,48 @@ def test_hashed_encoder_redundancy_signal():
 
 
 def test_engine_end_to_end_cobi():
+    """submit() is a real enqueue: the future resolves with no run_batch."""
     doc = " ".join(synthetic_document(1, 16))
     eng = SummarizationEngine(
         SolveConfig(solver="cobi", iterations=3, reads=6, int_range=14, steps=250),
         score_against_exact=True,
     )
-    req = eng.submit(doc, m=4)
-    (resp,) = eng.run_batch([req])
+    resp = eng.submit(doc, m=4).result(timeout=120.0)
     assert len(resp.summary) == 4
     assert resp.normalized is not None and resp.normalized > 0.6
     assert resp.projected_energy_joules < 1e-2  # COBI power regime
     assert resp.solver_invocations == 3
+    assert resp.bytes_h2d > 0 and resp.bytes_d2h > 0  # farm receipts billed
+    eng.close()
 
 
 def test_engine_decomposes_oversized():
+    """Tabu serves through the thread-pool SolverBackend, decomposition and
+    all (previously an inline per-request solve)."""
+    from repro.serving import SummarizeRequest
+
     doc = " ".join(synthetic_document(2, 70))
     eng = SummarizationEngine(
         SolveConfig(solver="tabu", iterations=1, reads=4, int_range=14, p=20, q=10)
     )
-    (resp,) = eng.run_batch([eng.submit(doc, m=6)])
+    assert eng.backend is not None and eng.backend.policy == "pool"
+    (resp,) = eng.run_batch([SummarizeRequest(text=doc, m=6)])
     assert len(resp.summary) == 6
     assert resp.solver_invocations > 1  # decomposition kicked in
+    eng.close()
 
 
 def test_engine_short_doc_passthrough():
     eng = SummarizationEngine()
-    (resp,) = eng.run_batch([eng.submit("One sentence only.", m=6)])
+    resp = eng.submit("One sentence only.", m=6).result(timeout=60.0)
     assert resp.summary == ["One sentence only."]
+    eng.close()
 
 
-def test_engine_duplicate_request_ids_all_served():
-    """Hand-built requests may share request_id=0; every one must be solved."""
+def test_engine_duplicate_request_ids_remapped_and_served():
+    """Hand-built requests sharing request_id=0 are remapped to fresh
+    engine-assigned ids (the engine owns id assignment) -- each is solved
+    under its OWN PRNG key instead of silently colliding."""
     from repro.serving import SummarizeRequest
 
     doc_a = " ".join(synthetic_document(11, 12))
@@ -107,12 +118,19 @@ def test_engine_duplicate_request_ids_all_served():
     )
     assert len(ra.summary) == 3 and len(rb.summary) == 3
     assert ra.summary != rb.summary  # each request got its own solve
+    assert ra.request_id != rb.request_id  # remapped, not tolerated
+    assert ra.request_id > 0 and rb.request_id > 0
+    eng.close()
 
 
 def test_engine_farm_cleared_between_batches():
+    from repro.serving import SummarizeRequest
+
     eng = SummarizationEngine(
         SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14, steps=150)
     )
     doc = " ".join(synthetic_document(13, 12))
-    eng.run_batch([eng.submit(doc, m=3)])
-    assert eng.farm is not None and not eng.farm._results  # bounded under load
+    eng.run_batch([SummarizeRequest(text=doc, m=3)])
+    # per-job release keeps a long-lived farm bounded under continuous load
+    assert eng.farm is not None and not eng.farm._results
+    eng.close()

@@ -34,7 +34,7 @@ from repro.farm import (
     estimate_packing,
     solve_many,
 )
-from repro.serving import SummarizationEngine
+from repro.serving import SummarizationEngine, SummarizeRequest
 
 
 def _instance(seed, n):
@@ -317,7 +317,9 @@ def test_engine_pipelined_windows_bit_identical_and_fewer_rounds():
     def serve(pipeline):
         c = dataclasses.replace(cfg, pipeline_windows=pipeline)
         eng = SummarizationEngine(c, n_chips=2)
-        responses = eng.run_batch([eng.submit(d, m=5) for d in docs], seed=0)
+        reqs = [SummarizeRequest(text=d, m=5, request_id=i + 1)
+                for i, d in enumerate(docs)]
+        responses = eng.run_batch(reqs, seed=0)
         drains = eng.farm.stats().drains
         eng.close()
         return responses, drains
@@ -343,7 +345,9 @@ def test_engine_background_policy_serving_matches_manual():
         if eng.farm.policy != "manual":
             eng.farm.linger = 0.01
             eng.farm.timer_interval = 0.01
-        responses = eng.run_batch([eng.submit(d, m=5) for d in docs], seed=0)
+        reqs = [SummarizeRequest(text=d, m=5, request_id=i + 1)
+                for i, d in enumerate(docs)]
+        responses = eng.run_batch(reqs, seed=0)
         eng.close()
         return responses
 
