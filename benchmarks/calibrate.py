@@ -1,0 +1,64 @@
+"""Fit and persist the serving router's calibration artifact.
+
+Runs the TTS/ETS calibration sweep (``repro.serving.calibration.
+calibrate_profile``: host wall seconds per solver invocation -> quadratic
+pool latency fit; Eq.-14 MLE success probability -> quality-gap knots) and
+writes the versioned ``CalibrationProfile`` JSON the router loads at serve
+time.  The checked-in artifact lives at
+``benchmarks/CALIBRATION_cobi_pool.json`` and is what makes routing
+decisions reproducible across machines; refresh it with::
+
+  PYTHONPATH=src:. python benchmarks/calibrate.py \
+      --out benchmarks/CALIBRATION_cobi_pool.json
+
+``--tiny`` shrinks the sweep for CI smoke runs (fit quality is NOT
+representative; CI only checks that the fit pipeline runs and the artifact
+round-trips).  The artifact schema is documented in the
+``repro.serving.calibration`` module docstring (``PROFILE_SCHEMA``).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def run(tiny: bool = False, out: str | None = None,
+        pool_solver: str = "cobi") -> "object":
+    from repro.serving.calibration import CalibrationProfile, calibrate_profile
+
+    kw = (
+        dict(sizes=(8, 12), n_benchmarks=2, iterations=4, steps=100)
+        if tiny else
+        dict(sizes=(10, 20, 40), n_benchmarks=3, iterations=8, steps=300)
+    )
+    prof = calibrate_profile(pool_solver=pool_solver, **kw)
+    pool = prof.model("pool")
+    farm = prof.model("farm")
+    for n in kw["sizes"]:
+        jobs = [(n, 8)]
+        print(
+            f"n={n:3d}  pool_s={pool.request_seconds(jobs, kw['steps']):.6f}"
+            f"  farm_s={farm.request_seconds(jobs, kw['steps']):.6f}"
+            f"  p_succ={dict(zip(pool.quality_n, pool.quality_p))[n]:.3f}"
+        )
+    if out:
+        prof.save(out)
+        # Round-trip check: the artifact must reproduce its own predictions.
+        back = CalibrationProfile.load(out)
+        probe = [(max(kw["sizes"]), 8)]
+        assert back.model("pool").request_seconds(probe, kw["steps"]) == \
+            pool.request_seconds(probe, kw["steps"])
+        print(f"wrote {out} (schema {back.version})")
+    return prof
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sweep for CI smoke runs (poor fit quality)")
+    ap.add_argument("--out", default=None,
+                    help="write the profile JSON to this path")
+    ap.add_argument("--pool-solver", default="cobi",
+                    help="solver the host pool backend runs (default: cobi)")
+    args = ap.parse_args()
+    run(tiny=args.tiny, out=args.out, pool_solver=args.pool_solver)

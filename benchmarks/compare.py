@@ -29,7 +29,7 @@ import sys
 
 # Metrics gated per scenario (when the baseline scenario carries them).
 TRACKED = ("rps", "occupancy", "bytes_per_req", "p50_ms", "p95_ms",
-           "rps_vs_lockstep")
+           "rps_vs_lockstep", "joules_per_req")
 
 
 def _check_scenario(name: str, brec: dict, nrec: dict, tolerance: float,

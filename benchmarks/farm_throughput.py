@@ -25,12 +25,25 @@ tail-latency scenario where per-job completion is timestamped by
 scenario (open-loop burst through the continuous ``submit()`` API against a
 bounded queue with sim-clock deadlines: goodput, rejection rate, and p95
 submit->done latency under overload).
+
+``--route`` additionally runs the ROUTED saturation scenario: the same
+open-loop overload burst served twice at identical offered load and
+deadlines -- once admission-only (infeasible tail is shed) and once with the
+cost-model router enabled (farm overload spills to the host
+``ThreadPoolBackend`` instead of shedding).  Reports goodput, reject rate,
+spills, deadline hits, and joules/request from REAL receipts on both
+backends (chip energy for farm jobs, watts x measured worker wall time for
+pool jobs).  Routing decisions come from the checked-in
+``benchmarks/CALIBRATION_cobi_pool.json`` profile (override with
+``--profile``), so the scenario is reproducible from the artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
 import time
 
 from benchmarks.common import emit
@@ -58,6 +71,9 @@ def _serve(engine, docs, seed=0):
 
 TIMED_REPS = 3  # serves per measurement; byte deltas are divided by this
 
+DEFAULT_PROFILE = os.path.join(os.path.dirname(__file__),
+                               "CALIBRATION_cobi_pool.json")
+
 
 def _timed_serves(engine, docs, reps=TIMED_REPS):
     """Median-of-reps serve time: single-shot timings on the shared CI box
@@ -78,7 +94,8 @@ def _emit(results, name, us, derived, **metrics):
 
 
 def run(tiny: bool = False, json_path: str | None = None,
-        policy: str | None = None) -> dict:
+        policy: str | None = None, route: bool = False,
+        profile: str | None = None) -> dict:
     import jax
 
     from repro.core import SolveConfig
@@ -246,6 +263,95 @@ def run(tiny: bool = False, json_path: str | None = None,
             rps=goodput, p95_ms=p95,
         )
 
+    # -- routed saturation: admission-only shedding vs. router + spill -----
+    # Same open-loop overload burst, same deadlines, twice: routing off
+    # (the estimator sheds the farm-infeasible tail) and routing on (the
+    # cost-model router spills that tail to the host pool).  reads=64 per
+    # request makes each farm drain 64 x 200us of sim-clock chip time, so
+    # the burst genuinely outruns the farm's deadline horizon while the
+    # wall-clock pool keeps spare capacity -- exactly the asymmetry the
+    # router exists to exploit.  (64 reads also lands on the same replica
+    # tier under the scheduler's ratio-2 bucketing and the cost model's
+    # ratio-3 bucketing, so the farm prediction stays conservative instead
+    # of optimistic.)  Energy is per-request from real receipts: chip
+    # joules for farm-served, host watts x worker wall for spilled.
+    # Each run loads the profile FRESH from disk: the engine feeds realized
+    # receipts into its profile's EWMA corrections online (that is the
+    # feature), so reusing one object across runs would leak the warmup's
+    # learned bias into the measured comparison.
+    if policy and policy != "manual" and route:
+        import numpy as _np
+
+        from repro.serving import (AdmissionConfig, CalibrationProfile,
+                                   EngineOverloadedError, SummarizationEngine)
+
+        prof_path = profile or DEFAULT_PROFILE
+        rcfg = dataclasses.replace(cfg, reads=64)
+        slack = 0.5  # sim-seconds of farm horizon; wall headroom for pool
+        burst_docs = docs * (8 if tiny else 4)
+
+        def routed_saturate(seed, routing):
+            eng = SummarizationEngine(
+                rcfg, n_chips=4, policy=policy, seed=seed,
+                admission=AdmissionConfig(max_queue_depth=256,
+                                          overload="reject"),
+                routing=routing,
+                profile=(CalibrationProfile.load(prof_path)
+                         if routing else None),
+            )
+            eng.farm.linger = 0.01
+            eng.farm.timer_interval = 0.01
+            futs, shed = [], 0
+            t0 = time.perf_counter()
+            for doc in burst_docs:
+                deadline = eng.backend.sim_now() + slack
+                try:
+                    futs.append(eng.submit(doc, m=5, deadline=deadline))
+                except EngineOverloadedError:
+                    shed += 1
+            responses = [f.result(timeout=120.0) for f in futs]
+            wall = time.perf_counter() - t0
+            spills = eng.router.stats()["spills"] if routing else 0
+            eng.close()
+            met = [r.deadline_met for r in responses
+                   if r.deadline_met is not None]
+            joules = [r.projected_energy_joules for r in responses]
+            return dict(
+                offered=len(burst_docs), completed=len(responses),
+                shed=shed, wall=wall, spills=spills,
+                met=(sum(met), len(met)),
+                joules=float(_np.mean(joules)) if joules else 0.0,
+            )
+
+        # Warmups: a pool-pinned serve compiles the host kernels for every
+        # doc shape (a cold jit on a spilled request would eat the whole
+        # wall-clock deadline), then one routed serve warms the farm's
+        # 48-read drain shapes and the driver threads.
+        pin = _engine(rcfg, 0)
+        _serve(pin, docs, seed=1)
+        pin.close()
+        routed_saturate(1, True)
+
+        base = routed_saturate(0, False)
+        routed = routed_saturate(0, True)
+        for tag, s in (("off", base), ("on", routed)):
+            goodput = s["completed"] / s["wall"]
+            derived = (
+                f"goodput_rps={goodput:.2f};completed={s['completed']}"
+                f"/{s['offered']};reject_rate={s['shed'] / s['offered']:.2f}"
+                f";spills={s['spills']}"
+                f";deadlines_met={s['met'][0]}/{s['met'][1]}"
+                f";joules_per_req={s['joules']:.4f}"
+            )
+            if tag == "on":
+                derived += (
+                    f";completed_vs_admission="
+                    f"{s['completed'] / max(base['completed'], 1):.2f}x"
+                )
+            _emit(results, f"farm_throughput_routed_{tag}_{s['offered']}req",
+                  s["wall"] / s["offered"] * 1e6, derived,
+                  rps=goodput, joules_per_req=s["joules"])
+
     # Heavy-tailed mix straight against the farm: best-fit-decreasing packing
     # + replica tiers, fused drains.  Each request contributes the engine's
     # ``iterations`` stochastic-rounding anneal jobs, so one drain packs
@@ -362,6 +468,14 @@ if __name__ == "__main__":
                     choices=["bin-full", "deadline", "timer"],
                     help="also serve the mix through a self-draining farm "
                          "with this drain policy (no caller-side drain)")
+    ap.add_argument("--route", action="store_true",
+                    help="also run the routed saturation scenario "
+                         "(admission-only vs cost-model router + spill); "
+                         "requires --policy")
+    ap.add_argument("--profile", default=None,
+                    help="calibration profile JSON for --route (default: "
+                         "the checked-in CALIBRATION_cobi_pool.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(tiny=args.tiny, json_path=args.json, policy=args.policy)
+    run(tiny=args.tiny, json_path=args.json, policy=args.policy,
+        route=args.route, profile=args.profile)

@@ -4,7 +4,18 @@ Methodology exactly as Sec. V: per-benchmark first-success iteration at
 normalized objective >= 0.9, MLE geometric success probability (Eq. 14),
 TTS at p_target = 0.95 (Eq. 15) with per-iteration hardware costs, ETS from
 solver + host-eval power (Eq. 16).  Hardware constants from the paper:
-COBI 200us/solve @25mW, Tabu 25ms @20W, eval 18.9us @20W."""
+COBI 200us/solve @25mW, Tabu 25ms @20W, eval 18.9us @20W.
+
+The same methodology feeds the serving router's calibration artifact
+(``repro.serving.calibration.calibrate_profile``): the MLE success
+probability p(n) becomes the router's quality-gap knots ((1-p(n))^iters)
+and the measured wall clocks become the host backend's quadratic latency
+model.  The artifact is a versioned JSON ``CalibrationProfile``
+(``schema`` = ``repro.serving.calibration.PROFILE_SCHEMA``, currently 1)
+with one ``BackendCostModel`` record per backend -- see the
+``repro.serving.calibration`` module docstring for the exact field list,
+and ``benchmarks/calibrate.py`` for the CLI that fits and writes one
+(checked in as ``benchmarks/CALIBRATION_cobi_pool.json``)."""
 
 from __future__ import annotations
 

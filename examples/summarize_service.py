@@ -19,6 +19,14 @@ degrades load under overload instead of letting the queue grow unboundedly:
 ``--policy bin-full|deadline|timer`` makes the farm self-draining: the
 engine never supplies a round barrier, futures resolve from the background
 drive loop, and results stay bit-identical to the manual default.
+
+``--route`` adds the cost-model backend router above admission (needs the
+default COBI farm, ``--chips > 0``): instead of shedding, farm overload
+spills onto the host worker pool, picked per request from per-backend
+latency/energy/quality predictions.  ``--profile`` points at a fitted
+``CalibrationProfile`` JSON (``benchmarks/CALIBRATION_cobi_pool.json``);
+without it routing uses the paper's hardware constants.  Responses report
+which backend served them; results stay bit-identical either way.
 """
 
 import argparse
@@ -44,6 +52,8 @@ def _print_response(resp):
         extras += f" | deadline {'MET' if resp.deadline_met else 'MISSED'}"
     if resp.degraded:
         extras += f" | degraded to reads={resp.reads_used}"
+    if resp.backend_used is not None:
+        extras += f" | via {resp.backend_used}"
     print(
         f"  req {resp.request_id}: {len(resp.summary)} sentences | "
         f"norm_obj={score} | wall={resp.wall_seconds * 1e3:.0f} ms | "
@@ -119,7 +129,11 @@ def run_open_loop(engine, args):
         f"({100 * rejected / max(n, 1):.0f}%) | degraded {stats.degraded} | "
         f"peak queue depth {stats.peak_depth}"
         + (f" | deadlines met {sum(met)}/{len(met)}" if met else "")
+        + (f" | spilled {stats.spilled}" if stats.spilled else "")
     )
+    if engine.router is not None:
+        print(f"Router: {engine.router.stats()} | "
+              f"admission errors: {engine.admission.estimate_errors()}")
     _print_farm(engine)
 
 
@@ -139,6 +153,12 @@ def main():
                     help="admission response past the cap / infeasible deadline")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="per-request sim-clock deadline in seconds (0 = none)")
+    ap.add_argument("--route", action="store_true",
+                    help="cost-model backend routing above admission "
+                         "(spill farm overload to the host pool)")
+    ap.add_argument("--profile", default=None,
+                    help="CalibrationProfile JSON for --route (default: "
+                         "built-in hardware-constant profile)")
     args = ap.parse_args()
 
     admission = None
@@ -154,6 +174,8 @@ def main():
         n_chips=args.chips,
         policy=args.policy,
         admission=admission,
+        routing=args.route,
+        profile=args.profile,
     )
     if args.arrival_rate > 0:
         run_open_loop(engine, args)

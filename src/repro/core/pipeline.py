@@ -14,7 +14,7 @@ driver interleaves many requests' rounds, and futures reduce back into a
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +83,13 @@ class SolveReport:
     bytes_h2d: int = 0
     bytes_d2h: int = 0
     sim_completed: float = 0.0
+    # Measured host worker wall time billed by pool receipts (0 for farm-only
+    # solves); with chip_seconds it forms the metered-receipts signal serving
+    # accounting keys on.
+    host_seconds: float = 0.0
+    # Routed solves: solve jobs per backend name ({} when no route hook ran).
+    # A decomposed request's windows may split across backends.
+    backend_jobs: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -94,14 +101,27 @@ class _Acct:
     bytes_h2d: int = 0
     bytes_d2h: int = 0
     sim_completed: float = 0.0
+    host_seconds: float = 0.0
+    backend_jobs: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def add(self, other) -> None:
-        """Fold in a receipt or another accumulator (same field names)."""
+        """Fold in a receipt or another accumulator (same field names;
+        receipts missing a field -- farm receipts carry no host_seconds --
+        contribute 0)."""
         self.chip_seconds += other.chip_seconds
+        self.host_seconds += getattr(other, "host_seconds", 0.0)
         self.energy_joules += other.energy_joules
         self.bytes_h2d += other.bytes_h2d
         self.bytes_d2h += other.bytes_d2h
         self.sim_completed = max(self.sim_completed, other.sim_completed)
+        for name, jobs in getattr(other, "backend_jobs", {}).items():
+            self.backend_jobs[name] = self.backend_jobs.get(name, 0) + jobs
+
+    def tally(self, backend_name: Optional[str], jobs: int) -> None:
+        if backend_name is not None:
+            self.backend_jobs[backend_name] = (
+                self.backend_jobs.get(backend_name, 0) + jobs
+            )
 
 
 def repair_selection(problem: EsProblem, x: np.ndarray) -> np.ndarray:
@@ -346,6 +366,15 @@ def _iter_iterations(
     return _reduce_iterations(problem, cfg, futures)
 
 
+# Per-window backend picker for routed serving: ``route(n, reads) ->
+# (backend_name, backend, deadline)``.  The deadline comes back from the
+# route because backends keep independent clocks (the farm's simulated
+# clock vs a pool's wall clock): whoever converts the request deadline must
+# know which backend won.  ``backend_name`` lands in
+# ``SolveReport.backend_jobs``; ``None`` disables tagging.
+RouteFn = Callable[[int, int], Tuple[Optional[str], object, Optional[float]]]
+
+
 def iter_solve_es(
     problem: EsProblem,
     key: Array,
@@ -356,6 +385,7 @@ def iter_solve_es(
     priority: int = 0,
     deadline: Optional[float] = None,
     tag: Optional[int] = None,
+    route: Optional[RouteFn] = None,
 ):
     """Generator form of :func:`solve_es` over a :class:`SolverBackend`.
 
@@ -365,11 +395,17 @@ def iter_solve_es(
     round for a direct solve; a decomposed solve yields once per window under
     ``pipeline_windows=False`` and only on unresolved frontiers under the
     default pipelined driver); returns a :class:`SolveReport` whose
-    chip_seconds / chip_energy_joules / bytes / sim_completed come from the
-    backend's job receipts.  ``deadline`` (absolute simulated time) is
-    stamped on every submitted job, which is what the farm's
+    chip_seconds / host_seconds / chip_energy_joules / bytes / sim_completed
+    come from the backend's job receipts.  ``deadline`` (absolute simulated
+    time) is stamped on every submitted job, which is what the farm's
     ``policy="deadline"`` watermark trigger keys on; ``tag`` (opaque caller
     metadata, e.g. a serving request id) is echoed on every receipt.
+
+    ``route`` (see :data:`RouteFn`) overrides the backend per submission
+    unit -- once for a direct solve, per window for a decomposed one -- so a
+    router can spill individual windows onto another backend; results stay
+    bit-identical (jobs solve from their own keys on any backend running the
+    same solver) and ``SolveReport.backend_jobs`` records the split.
     """
     backend = backend if backend is not None else farm
     if backend is None:
@@ -382,24 +418,30 @@ def iter_solve_es(
     if cfg.decompose:
         if cfg.pipeline_windows:
             return (yield from _iter_decomposed(
-                problem, key, cfg, backend, priority, deadline, tag
+                problem, key, cfg, backend, priority, deadline, tag, route
             ))
         return (yield from _iter_decomposed_lockstep(
-            problem, key, cfg, backend, priority, deadline, tag
+            problem, key, cfg, backend, priority, deadline, tag, route
         ))
+    name = None
+    if route is not None:
+        name, backend, deadline = route(problem.n, cfg.reads)
     best_x, best_obj, curve, acct = yield from _iter_iterations(
         problem, key, cfg, backend, priority, deadline, tag
     )
+    acct.tally(name, cfg.iterations)
     return SolveReport(
         best_x, best_obj, np.asarray(curve), cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
-        acct.sim_completed,
+        acct.sim_completed, host_seconds=acct.host_seconds,
+        backend_jobs=acct.backend_jobs,
     )
 
 
 def _iter_decomposed_lockstep(
     problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
     deadline: Optional[float] = None, tag: Optional[int] = None,
+    route: Optional[RouteFn] = None,
 ):
     """Legacy decomposed backend driver: ONE window in flight at a time.
 
@@ -415,10 +457,14 @@ def _iter_decomposed_lockstep(
     item = next(steps)
     while True:
         sub, m, k_sub = item
+        w_name, w_backend, w_deadline = None, backend, deadline
+        if route is not None:
+            w_name, w_backend, w_deadline = route(sub.n, sub_cfg.reads)
         sel, _, _, sub_acct = yield from _iter_iterations(
-            sub.with_m(m), k_sub, sub_cfg, backend, priority, deadline, tag
+            sub.with_m(m), k_sub, sub_cfg, w_backend, priority, w_deadline, tag
         )
         acct.add(sub_acct)
+        acct.tally(w_name, sub_cfg.iterations)
         try:
             item = steps.send(sel)
         except StopIteration as done:
@@ -430,13 +476,15 @@ def _iter_decomposed_lockstep(
     return SolveReport(
         selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
-        acct.sim_completed,
+        acct.sim_completed, host_seconds=acct.host_seconds,
+        backend_jobs=acct.backend_jobs,
     )
 
 
 def _iter_decomposed(
     problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
     deadline: Optional[float] = None, tag: Optional[int] = None,
+    route: Optional[RouteFn] = None,
 ):
     """Pipelined decomposed backend driver: ALL planned windows in flight.
 
@@ -477,12 +525,17 @@ def _iter_decomposed(
             fkey = (spec.seq, spec.indices)
             if fkey not in inflight:
                 sub = problem.subproblem(np.asarray(spec.indices)).with_m(spec.m)
+                w_name, w_backend, w_deadline = None, backend, deadline
+                if route is not None:
+                    w_name, w_backend, w_deadline = route(sub.n, sub_cfg.reads)
                 inflight[fkey] = (
                     sub,
                     _submit_iterations(
-                        sub, spec.key, sub_cfg, backend, priority, deadline, tag
+                        sub, spec.key, sub_cfg, w_backend, priority,
+                        w_deadline, tag
                     ),
                 )
+                acct.tally(w_name, sub_cfg.iterations)
                 windows_submitted += 1
         spec = plan.next_spec()
         fkey = (spec.seq, spec.indices)
@@ -506,6 +559,7 @@ def _iter_decomposed(
             if fut.done():
                 receipt = fut.receipt()
                 acct.chip_seconds += receipt.chip_seconds
+                acct.host_seconds += getattr(receipt, "host_seconds", 0.0)
                 acct.energy_joules += receipt.energy_joules
                 acct.bytes_h2d += receipt.bytes_h2d
                 acct.bytes_d2h += receipt.bytes_d2h
@@ -526,7 +580,8 @@ def _iter_decomposed(
     return SolveReport(
         selection, obj, np.asarray([obj]), windows_submitted * cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
-        acct.sim_completed,
+        acct.sim_completed, host_seconds=acct.host_seconds,
+        backend_jobs=acct.backend_jobs,
     )
 
 

@@ -123,7 +123,7 @@ from repro.farm.packing import (
 )
 from repro.kernels import ops
 from repro.kernels import ref as kref
-from repro.solvers.base import SolverResult
+from repro.solvers.base import CapacityHint, SolverResult
 from repro.solvers.cobi import COBI_MAX_SPINS, check_programmable
 
 Array = jax.Array
@@ -689,6 +689,43 @@ class CobiFarm:
     def pending_jobs(self) -> int:
         with self._lock:
             return len(self._pending)
+
+    def capacity_hint(self) -> CapacityHint:
+        """Predicted sim-seconds to clear the CURRENT queue (for routing).
+
+        Same estimate the deadline drain policy uses: group pending jobs by
+        anneal schedule, tier by read count, best-fit estimate the packing,
+        then charge ``ceil(bins / n_chips)`` chip cycles of
+        ``tier_reads * seconds_per_solve`` per (schedule, tier) group --
+        conservative (groups are charged sequentially, as drains run them).
+        """
+        with self._lock:
+            pending = list(self._pending)
+        total = 0.0
+        groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
+        for job in pending:
+            gkey = (job.steps, job.dt, job.ks_max, job.reduce)
+            groups.setdefault(gkey, []).append(job)
+        for jobs in groups.values():
+            tiers = replica_tiers(
+                [j.reads for j in jobs],
+                bucket=REPLICA_BUCKET, ratio=REPLICA_TIER_RATIO,
+            )
+            for tier_reads, idxs in tiers:
+                est = estimate_packing(
+                    [jobs[i].ising.n for i in idxs], self.lanes_per_chip
+                )
+                total += (
+                    math.ceil(est.n_bins / self.n_chips)
+                    * tier_reads
+                    * self.hardware.seconds_per_solve
+                )
+        return CapacityHint(
+            pending_jobs=len(pending),
+            est_queue_seconds=total,
+            parallelism=self.n_chips,
+            kind="sim",
+        )
 
     # ------------------------------------------------------------ internals
 

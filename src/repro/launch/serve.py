@@ -6,7 +6,12 @@ Serves through the continuous engine API: every request is ``submit()``-ed
 (admission-controlled enqueue returning a ``ResponseFuture``) and responses
 stream back in completion order.  ``--max-queue-depth`` bounds admitted
 work (excess submissions are rejected with ``EngineOverloadedError`` and
-reported), the overload posture of a real deployment.
+reported), the overload posture of a real deployment.  ``--route`` puts the
+cost-model backend router above admission (COBI farm only): farm overload
+spills onto the host pool instead of shedding, with per-backend
+latency/energy/quality predictions from ``--profile`` (a
+``CalibrationProfile`` JSON, e.g. ``benchmarks/CALIBRATION_cobi_pool.json``;
+default: the built-in hardware-constant profile).
 """
 
 from __future__ import annotations
@@ -26,6 +31,14 @@ def main():
     ap.add_argument("--iterations", type=int, default=6)
     ap.add_argument("--max-queue-depth", type=int, default=0,
                     help="admission cap on in-flight requests (0 = unbounded)")
+    ap.add_argument("--route", action="store_true",
+                    help="cost-model backend routing above admission "
+                         "(spill farm overload to the host pool)")
+    ap.add_argument("--route-objective", default="min-energy",
+                    choices=["min-energy", "min-latency", "weighted"])
+    ap.add_argument("--profile", default=None,
+                    help="CalibrationProfile JSON for --route (default: "
+                         "built-in hardware-constant profile)")
     args = ap.parse_args()
 
     admission = (AdmissionConfig(max_queue_depth=args.max_queue_depth)
@@ -34,6 +47,9 @@ def main():
         SolveConfig(solver=args.solver, iterations=args.iterations, reads=8,
                     int_range=14, p=20, q=10),
         admission=admission,
+        routing=args.route,
+        route_objective=args.route_objective,
+        profile=args.profile,
     )
     futures, rejected = [], 0
     for i in range(args.requests):
@@ -50,9 +66,12 @@ def main():
             f"projected={resp.projected_solver_seconds * 1e3:.2f}ms/"
             f"{resp.projected_energy_joules * 1e3:.3f}mJ, "
             f"xfer={(resp.bytes_h2d + resp.bytes_d2h) / 1024:.0f}KiB"
+            + (f", via {resp.backend_used}" if resp.backend_used else "")
         )
     if rejected:
         print(f"{rejected} request(s) shed by admission control")
+    if engine.router is not None:
+        print(f"router: {engine.router.stats()}")
     engine.close()
 
 

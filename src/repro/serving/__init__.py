@@ -5,10 +5,24 @@ from repro.serving.admission import (  # noqa: F401
     AdmissionTicket,
     EngineOverloadedError,
 )
+from repro.serving.calibration import (  # noqa: F401
+    BackendCostModel,
+    CalibrationProfile,
+    calibrate_profile,
+    default_profile,
+    fit_host_latency,
+)
 from repro.serving.engine import (  # noqa: F401
     RequestCancelled,
+    RequestEvicted,
     ResponseFuture,
     SummarizationEngine,
     SummarizeRequest,
     SummarizeResponse,
+)
+from repro.serving.router import (  # noqa: F401
+    BackendRouter,
+    InfeasibleRoute,
+    RouteDecision,
+    RouterConfig,
 )

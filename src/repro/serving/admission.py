@@ -7,20 +7,33 @@ and the solver backend and applies two checks per request:
 
 * **Queue depth** -- ``max_queue_depth`` is a hard cap on requests admitted
   but not yet finished.  At the cap, submission raises
-  :class:`EngineOverloadedError` (load shedding: the caller retries or
-  routes elsewhere), which is what lets the deadline drain policy actually
-  meet its watermarks at saturation -- an unbounded queue makes every
-  deadline infeasible eventually no matter how drains are scheduled.
+  :class:`EngineOverloadedError` with ``reason="depth"`` (load shedding: the
+  caller retries or routes elsewhere), which is what lets the deadline drain
+  policy actually meet its watermarks at saturation -- an unbounded queue
+  makes every deadline infeasible eventually no matter how drains are
+  scheduled.  Under ``shed="evict-lowest"`` the engine responds to a depth
+  rejection by evicting the lowest-priority / slackest-deadline QUEUED
+  request instead of shedding the newcomer (see
+  ``SummarizationEngine._evict_for``); the controller just counts the
+  eviction (``note_eviction``).
 
 * **Deadline feasibility** -- for requests carrying a deadline, the
   controller estimates the completion time of everything already admitted
   plus this request, reusing the farm's shape-only packing estimator
   (:func:`repro.farm.packing.estimate_packing` over per-job lane counts,
   replica-tiered exactly like a real drain) against the simulated hardware
-  clock.  An infeasible request is rejected -- or, under
-  ``overload="degrade"``, retried at ``reads_floor`` anneal reads (less chip
-  time per job, a cheaper but lower-quality solve) and admitted degraded if
-  that fits.
+  clock.  An infeasible request is rejected (``reason="deadline"``) -- or,
+  under ``overload="degrade"``, retried at ``reads_floor`` anneal reads
+  (less chip time per job, a cheaper but lower-quality solve) and admitted
+  degraded if that fits.
+
+When a :class:`repro.serving.router.BackendRouter` is attached, feasibility
+consults the router's cost models instead of assuming the farm: the router
+predicts completion on EVERY routable backend (given the per-backend work
+this controller has already admitted) and the request is admitted onto the
+cheapest feasible one -- farm overload SPILLS onto the host pool before any
+degrade/reject.  The chosen backend and predicted latency ride on the
+:class:`AdmissionTicket`.
 
 ``overload="degrade"`` also floors the reads of any request admitted while
 the queue sits above ``degrade_depth`` (default: half the cap), trading
@@ -29,7 +42,15 @@ Both checks are estimates on the SIMULATED clock -- they bound queued chip
 work, not host wall time.  Admission never changes results of admitted
 requests beyond the ``reads`` knob: jobs draw from their own keys, so a
 request admitted with its requested reads is bit-identical under any
-admission configuration.
+admission configuration (and under any routing decision, when the routable
+backends run the same solver).
+
+The controller also audits itself: ``on_done(request_id, realized=...)``
+records realized-minus-estimated completion errors (a bounded deque), the
+distribution is exposed via ``estimate_errors()``, and with
+``auto_watermark=True`` the effective deadline watermark widens by the 90th
+percentile of observed lateness -- the estimate's optimism about drain
+slicing becomes a measured margin instead of a hand-tuned constant.
 """
 
 from __future__ import annotations
@@ -37,14 +58,27 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 from repro.farm.packing import estimate_packing, replica_tiers
 
+# Minimum recorded lateness samples before auto_watermark starts widening;
+# below this the quantile is noise.
+_AUTO_WATERMARK_MIN_SAMPLES = 4
+
 
 class EngineOverloadedError(RuntimeError):
-    """Submission rejected by admission control (queue full, or the
-    request's deadline is infeasible given already-admitted work)."""
+    """Submission rejected by admission control.
+
+    ``reason`` distinguishes the failing check: ``"depth"`` (the hard
+    ``max_queue_depth`` cap -- under ``shed="evict-lowest"`` the engine may
+    evict a lower-priority queued request and retry) vs ``"deadline"`` (no
+    backend or degrade level makes the deadline feasible)."""
+
+    def __init__(self, message: str, *, reason: str = "depth"):
+        super().__init__(message)
+        self.reason = reason
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,9 +89,13 @@ class AdmissionConfig:
     :class:`EngineOverloadedError`; ``"degrade"`` first retries the request
     at ``reads_floor`` reads and only rejects if even that cannot meet the
     deadline (the depth cap always rejects -- shrinking reads cannot shrink
-    the queue).  ``deadline_watermark`` is the safety margin (simulated
-    seconds) the completion estimate must clear; generous margins absorb the
-    estimate's optimism about drain slicing."""
+    the queue).  ``shed`` picks the depth-cap policy: ``"reject-new"`` sheds
+    the newcomer, ``"evict-lowest"`` lets the engine evict the
+    lowest-priority / slackest-deadline QUEUED request to make room.
+    ``deadline_watermark`` is the safety margin (simulated seconds) the
+    completion estimate must clear; generous margins absorb the estimate's
+    optimism about drain slicing -- or set ``auto_watermark=True`` to widen
+    the margin from the measured estimate-error distribution instead."""
 
     max_queue_depth: Optional[int] = None
     overload: str = "reject"  # "reject" | "degrade"
@@ -69,11 +107,17 @@ class AdmissionConfig:
     # stamping a deadline on a request must not start shedding load unless
     # the operator opted into admission control.
     deadline_feasibility: bool = True
+    shed: str = "reject-new"  # "reject-new" | "evict-lowest"
+    auto_watermark: bool = False
 
     def __post_init__(self):
         if self.overload not in ("reject", "degrade"):
             raise ValueError(
                 f"overload must be 'reject' or 'degrade', got {self.overload!r}"
+            )
+        if self.shed not in ("reject-new", "evict-lowest"):
+            raise ValueError(
+                f"shed must be 'reject-new' or 'evict-lowest', got {self.shed!r}"
             )
         if self.reads_floor < 1:
             raise ValueError(f"reads_floor must be >= 1, got {self.reads_floor}")
@@ -87,6 +131,9 @@ class AdmissionTicket:
     reads: int  # effective reads (== requested unless degraded)
     degraded: bool
     est_completion: float  # estimated sim-clock completion (0 if unknown)
+    backend: Optional[str] = None  # router-chosen backend name (None = default)
+    predicted_seconds: float = 0.0  # router-predicted latency incl. queue wait
+    sim_at_admit: float = 0.0  # backend sim clock when admitted
 
 
 @dataclasses.dataclass
@@ -96,6 +143,19 @@ class AdmissionStats:
     degraded: int = 0
     depth: int = 0  # requests currently admitted-but-unfinished
     peak_depth: int = 0
+    evicted: int = 0  # queued requests evicted to make room (shed="evict-lowest")
+    spilled: int = 0  # requests routed off the primary backend
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """Admitted-but-unfinished bookkeeping for one request."""
+
+    jobs: List[tuple]  # (lanes, reads) per planned solve job
+    backend: Optional[str] = None
+    work_seconds: float = 0.0  # predicted request work (excl. queue wait)
+    est_completion: float = 0.0
+    priority: int = 0
 
 
 class AdmissionController:
@@ -104,8 +164,10 @@ class AdmissionController:
     ``lanes_per_chip`` / ``n_chips`` / ``seconds_per_solve`` describe the
     backend's packing geometry (taken from the farm; ``None`` for host
     backends, which disables the deadline-feasibility estimate and leaves
-    only the depth cap).  Thread-safe: ``admit`` may race with ``on_done``
-    from the engine's driver thread.
+    only the depth cap).  ``router`` (a
+    :class:`repro.serving.router.BackendRouter`) replaces the farm-only
+    estimate with per-backend cost-model feasibility + spill.  Thread-safe:
+    ``admit`` may race with ``on_done`` from the engine's driver thread.
     """
 
     def __init__(
@@ -117,6 +179,7 @@ class AdmissionController:
         seconds_per_solve: float = 0.0,
         replica_bucket: int = 8,
         tier_ratio: float = 2.0,
+        router=None,
     ):
         self.config = config or AdmissionConfig()
         self.lanes_per_chip = lanes_per_chip
@@ -124,10 +187,12 @@ class AdmissionController:
         self.seconds_per_solve = seconds_per_solve
         self.replica_bucket = replica_bucket
         self.tier_ratio = tier_ratio
+        self.router = router
         self._lock = threading.Lock()
-        # request_id -> list of (lanes, reads) for every planned solve job.
-        self._inflight: Dict[int, List[tuple]] = {}
+        self._inflight: Dict[int, _Inflight] = {}
         self._stats = AdmissionStats()
+        # realized - estimated completion, most recent requests only.
+        self._est_errors: deque = deque(maxlen=256)
 
     # ------------------------------------------------------------------ API
 
@@ -138,13 +203,19 @@ class AdmissionController:
         reads: int,
         deadline: Optional[float],
         sim_now: float,
+        *,
+        priority: int = 0,
+        steps: int = 400,
+        iterations: int = 1,
+        quality_floor: Optional[float] = None,
     ) -> AdmissionTicket:
         """Gate one request carrying ``len(job_lanes)`` planned solve jobs.
 
-        Returns a ticket with the effective ``reads`` or raises
+        Returns a ticket with the effective ``reads`` (and, with a router,
+        the chosen ``backend`` + predicted latency) or raises
         :class:`EngineOverloadedError`.  ``job_lanes`` are the estimated spin
         counts of the request's solve jobs (iterations x decomposition
-        windows); ``sim_now`` is the backend's current simulated clock.
+        windows); ``sim_now`` is the primary backend's current clock.
         """
         cfg = self.config
         with self._lock:
@@ -153,7 +224,8 @@ class AdmissionController:
                 self._stats.rejected += 1
                 raise EngineOverloadedError(
                     f"admission queue full: {depth} requests in flight "
-                    f"(max_queue_depth={cfg.max_queue_depth})"
+                    f"(max_queue_depth={cfg.max_queue_depth})",
+                    reason="depth",
                 )
             eff_reads, degraded = reads, False
             if cfg.overload == "degrade":
@@ -164,41 +236,86 @@ class AdmissionController:
                 if soft > 0 and depth >= soft:
                     eff_reads = min(reads, cfg.reads_floor)
                     degraded = eff_reads < reads
+            watermark = self._effective_watermark_locked()
+            backend = None
+            predicted = 0.0
             est = 0.0
-            if (deadline is not None and cfg.deadline_feasibility
+            work = 0.0
+            if self.router is not None:
+                decision, eff_reads, degraded = self._route_locked(
+                    job_lanes, eff_reads, degraded, deadline, sim_now,
+                    steps=steps, iterations=iterations, watermark=watermark,
+                    quality_floor=quality_floor, depth=depth,
+                )
+                backend = decision.backend
+                predicted = decision.predicted_seconds
+                work = max(predicted - decision.queue_seconds, 0.0)
+                est = sim_now + predicted
+                if decision.reason == "spill":
+                    self._stats.spilled += 1
+            elif (deadline is not None and cfg.deadline_feasibility
                     and self.lanes_per_chip):
                 est = self._estimate_completion_locked(
                     job_lanes, eff_reads, sim_now
                 )
-                if est > deadline - cfg.deadline_watermark:
+                if est > deadline - watermark:
                     if cfg.overload == "degrade" and eff_reads > cfg.reads_floor:
                         eff_reads = cfg.reads_floor
                         est = self._estimate_completion_locked(
                             job_lanes, eff_reads, sim_now
                         )
-                        degraded = est <= deadline - cfg.deadline_watermark
-                    if est > deadline - cfg.deadline_watermark:
+                        degraded = est <= deadline - watermark
+                    if est > deadline - watermark:
                         self._stats.rejected += 1
                         raise EngineOverloadedError(
                             f"deadline infeasible: estimated completion "
                             f"{est:.6f}s (sim) > deadline {deadline:.6f}s - "
-                            f"watermark {cfg.deadline_watermark:.6f}s with "
-                            f"{depth} requests in flight"
+                            f"watermark {watermark:.6f}s with "
+                            f"{depth} requests in flight",
+                            reason="deadline",
                         )
-            self._inflight[request_id] = [(int(n), eff_reads)
-                                          for n in job_lanes]
+                work = max(est - sim_now, 0.0)
+            self._inflight[request_id] = _Inflight(
+                jobs=[(int(n), eff_reads) for n in job_lanes],
+                backend=backend,
+                work_seconds=work,
+                est_completion=est,
+                priority=priority,
+            )
             self._stats.admitted += 1
             if degraded:
                 self._stats.degraded += 1
             self._stats.depth = len(self._inflight)
             self._stats.peak_depth = max(self._stats.peak_depth,
                                          self._stats.depth)
-            return AdmissionTicket(request_id, eff_reads, degraded, est)
+            return AdmissionTicket(
+                request_id, eff_reads, degraded, est,
+                backend=backend, predicted_seconds=predicted,
+                sim_at_admit=sim_now,
+            )
 
-    def on_done(self, request_id: int) -> None:
-        """Release a request's admitted work (completion, failure, cancel)."""
+    def on_done(self, request_id: int,
+                realized: Optional[float] = None) -> None:
+        """Release a request's admitted work (completion, failure, cancel).
+
+        ``realized`` is the request's actual sim-clock completion time; when
+        given (and the request carried a completion estimate) the
+        estimate error is recorded for ``estimate_errors()`` /
+        ``auto_watermark``.
+        """
+        with self._lock:
+            rec = self._inflight.pop(request_id, None)
+            self._stats.depth = len(self._inflight)
+            if (rec is not None and realized is not None
+                    and rec.est_completion > 0.0):
+                self._est_errors.append(realized - rec.est_completion)
+
+    def note_eviction(self, request_id: int) -> None:
+        """Record that the engine evicted queued ``request_id`` to make room
+        (``shed="evict-lowest"``); releases its admitted work."""
         with self._lock:
             self._inflight.pop(request_id, None)
+            self._stats.evicted += 1
             self._stats.depth = len(self._inflight)
 
     def depth(self) -> int:
@@ -215,7 +332,101 @@ class AdmissionController:
         with self._lock:
             return dataclasses.replace(self._stats)
 
+    def estimate_errors(self) -> dict:
+        """Distribution of realized-minus-estimated completion (seconds).
+
+        Positive = the request finished LATER than admission estimated (the
+        dangerous direction for deadlines).  ``watermark_extra`` is the
+        widening ``auto_watermark`` currently applies."""
+        with self._lock:
+            errs = sorted(self._est_errors)
+            extra = (self._effective_watermark_locked()
+                     - self.config.deadline_watermark)
+        if not errs:
+            return {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                    "max": 0.0, "watermark_extra": extra}
+        def q(frac):
+            return errs[min(len(errs) - 1, int(frac * len(errs)))]
+        return {
+            "n": len(errs),
+            "mean": sum(errs) / len(errs),
+            "p50": q(0.5),
+            "p90": q(0.9),
+            "max": errs[-1],
+            "watermark_extra": extra,
+        }
+
+    def effective_watermark(self) -> float:
+        """The deadline margin feasibility currently enforces (config
+        watermark + any auto-widening)."""
+        with self._lock:
+            return self._effective_watermark_locked()
+
     # ------------------------------------------------------------ internals
+
+    def _effective_watermark_locked(self) -> float:
+        wm = self.config.deadline_watermark
+        if not self.config.auto_watermark:
+            return wm
+        late = sorted(e for e in self._est_errors if e > 0.0)
+        if len(late) < _AUTO_WATERMARK_MIN_SAMPLES:
+            return wm
+        # Widen by the 90th percentile of observed lateness: 9 out of 10
+        # historical estimate misses would have fit inside the margin.
+        return wm + late[min(len(late) - 1, int(0.9 * len(late)))]
+
+    def _route_locked(self, job_lanes, eff_reads, degraded, deadline,
+                      sim_now, *, steps, iterations, watermark,
+                      quality_floor, depth):
+        """Router-backed feasibility: per-backend predictions over the work
+        already admitted; degrade-retry on infeasibility.  Returns
+        ``(RouteDecision, eff_reads, degraded)`` or raises."""
+        from repro.serving.router import InfeasibleRoute
+
+        cfg = self.config
+        queued = self._queued_seconds_locked()
+        slack = None
+        if deadline is not None and cfg.deadline_feasibility:
+            slack = deadline - sim_now - watermark
+        jobs = [(int(n), eff_reads) for n in job_lanes]
+        try:
+            decision = self.router.decide(
+                jobs, steps=steps, iterations=iterations,
+                deadline_slack=slack, queued_seconds=queued,
+                quality_floor=quality_floor,
+            )
+            return decision, eff_reads, degraded
+        except InfeasibleRoute as exc:
+            if cfg.overload == "degrade" and eff_reads > cfg.reads_floor:
+                floored = [(int(n), cfg.reads_floor) for n in job_lanes]
+                try:
+                    decision = self.router.decide(
+                        floored, steps=steps, iterations=iterations,
+                        deadline_slack=slack, queued_seconds=queued,
+                        quality_floor=quality_floor,
+                    )
+                    return decision, cfg.reads_floor, True
+                except InfeasibleRoute:
+                    pass
+            self._stats.rejected += 1
+            raise EngineOverloadedError(
+                f"no routable backend is feasible with {depth} requests in "
+                f"flight: {exc}",
+                reason="deadline",
+            ) from exc
+
+    def _queued_seconds_locked(self) -> Dict[str, float]:
+        """Predicted seconds of already-admitted work, per backend -- the
+        router's queue-wait input (the admission-side view of load, coherent
+        with the sequential per-request model of the estimator below)."""
+        queued: Dict[str, float] = {}
+        for rec in self._inflight.values():
+            if rec.backend is None:
+                continue
+            queued[rec.backend] = (
+                queued.get(rec.backend, 0.0) + rec.work_seconds
+            )
+        return queued
 
     def _estimate_completion_locked(
         self, job_lanes: Sequence[int], reads: int, sim_now: float
@@ -233,7 +444,7 @@ class AdmissionController:
         than this bound.  (Decomposed requests submit window waves that can
         fragment further; ``deadline_watermark`` is the margin for that.)
         """
-        per_request = [list(jobs) for jobs in self._inflight.values()]
+        per_request = [list(rec.jobs) for rec in self._inflight.values()]
         per_request.append([(int(n), reads) for n in job_lanes])
         total = 0.0
         for jobs in per_request:

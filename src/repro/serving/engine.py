@@ -37,12 +37,25 @@ The serving surface is **continuous**, not batch-shaped:
   farm's deadline drain policy can actually meet its watermarks at
   saturation instead of watching an unbounded queue blow every deadline.
 
+* With ``routing=True`` a :class:`repro.serving.router.BackendRouter` sits
+  between admission and the backends: per-backend cost models (a
+  :class:`repro.serving.calibration.CalibrationProfile` -- checked-in
+  artifact or the built-in default) predict latency/energy/quality on the
+  COBI farm AND a same-solver host thread pool, admission feasibility
+  consults those predictions across backends, and farm overload SPILLS onto
+  the pool instead of shedding.  Results are bit-identical wherever a
+  request lands (every job solves from its own key; both backends run the
+  same solver); only latency/energy accounting and the serving clock
+  differ.  Decomposed requests route per window; responses carry
+  ``backend_used`` and predicted-vs-realized latency, and realized receipts
+  feed the profile's EWMA corrections.
+
 Jobs go in with ``reduce="best"`` (the COBI farm's fused
 anneal->readout->best-of epilogue selects each iteration's winning read ON
 DEVICE; host backends reduce in the worker).  Per-request latency, energy
 and attributed h2d/d2h transfer bytes come from the backend's job receipts
-(the paper's 200 us / 25 mW hardware model); host-solver backends report
-zero receipts and fall back to the per-invocation hardware model.
+(the paper's 200 us / 25 mW hardware model for the farm; measured worker
+wall time x host watts for thread pools).
 """
 
 from __future__ import annotations
@@ -64,7 +77,13 @@ from repro.core.pipeline import iter_solve_es, solve_es
 from repro.data.text import split_sentences
 from repro.embeddings import HashedBowEncoder, problem_from_sentences
 from repro.farm import CobiFarm
-from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    EngineOverloadedError,
+)
+from repro.serving.calibration import CalibrationProfile, default_profile
+from repro.serving.router import BackendRouter, RouterConfig
 from repro.solvers.base import AwaitableFuture, ThreadPoolBackend
 from repro.solvers.cobi import COBI_MAX_SPINS
 
@@ -75,6 +94,11 @@ _POOL_SOLVERS = ("tabu", "sa")
 
 class RequestCancelled(RuntimeError):
     """The request was cancelled before the driver picked it up."""
+
+
+class RequestEvicted(RequestCancelled):
+    """The queued request was evicted (``shed="evict-lowest"``) to make room
+    for a higher-priority / tighter-deadline newcomer at the depth cap."""
 
 
 @dataclasses.dataclass
@@ -111,6 +135,14 @@ class SummarizeResponse:
     deadline_met: Optional[bool] = None
     reads_used: int = 0  # effective anneal reads (< requested when degraded)
     degraded: bool = False  # admission floored the reads under overload
+    # Routed serving: which backend served the request (dominant backend of a
+    # window-split decomposed request; None without a router), what the
+    # router predicted at admission, and what actually happened on the
+    # serving backend's clock -- the per-request predicted-vs-realized pair
+    # the profile's EWMA correction learns from.
+    backend_used: Optional[str] = None
+    predicted_seconds: float = 0.0
+    realized_seconds: float = 0.0
 
 
 class ResponseFuture(AwaitableFuture):
@@ -154,6 +186,9 @@ class _Work:
     reads: int  # effective reads from admission (== cfg.reads unless degraded)
     degraded: bool
     future: ResponseFuture
+    backend_name: Optional[str] = None  # router-chosen backend from the ticket
+    predicted_seconds: float = 0.0
+    sim_at_admit: float = 0.0  # primary backend clock at admission
 
 
 class SummarizationEngine:
@@ -170,6 +205,10 @@ class SummarizationEngine:
         backend=None,
         pool_workers: int = 4,
         admission: Optional[AdmissionConfig] = None,
+        routing: bool = False,
+        route_objective: str = "min-energy",
+        profile=None,
+        quality_floor: Optional[float] = None,
         seed: int = 0,
     ):
         """``backend`` injects any :class:`repro.solvers.base.SolverBackend`.
@@ -181,9 +220,16 @@ class SummarizationEngine:
         farm self-draining: the driver never calls ``drain()`` and futures
         resolve from the farm's background drive loop.  ``admission``
         configures the submit-side admission layer (default: admit
-        everything).  ``seed`` keys the continuous ``submit()`` path: request
-        ``r``'s key is ``fold_in(key(seed), r)``, so a ``run_batch`` with the
-        same seed and the same engine-assigned ids is bit-identical."""
+        everything).  ``routing=True`` (COBI farm backends only) adds a
+        same-solver host thread pool and a :class:`BackendRouter` above
+        admission: ``profile`` is a :class:`CalibrationProfile` (or a path to
+        a saved one; default: the uncalibrated hardware-constant profile),
+        ``route_objective`` picks min-energy / min-latency / weighted, and
+        ``quality_floor`` caps the predicted quality gap a backend may incur.
+        ``seed`` keys the continuous ``submit()`` path: request ``r``'s key
+        is ``fold_in(key(seed), r)``, so a ``run_batch`` with the same seed
+        and the same engine-assigned ids is bit-identical -- routing never
+        changes results, only where (and at what cost) they are computed."""
         self.cfg = solve_cfg or SolveConfig(
             solver="cobi", iterations=6, reads=8, int_range=14
         )
@@ -203,6 +249,32 @@ class SummarizationEngine:
                                              workers=pool_workers)
         else:
             self.backend = None
+        self.router: Optional[BackendRouter] = None
+        if routing:
+            if self.farm is None or self.backend is not self.farm:
+                raise ValueError(
+                    "routing=True requires the default COBI farm backend "
+                    "(solver='cobi' with a farm); spill targets a same-"
+                    "solver host pool"
+                )
+            if isinstance(profile, str):
+                profile = CalibrationProfile.load(profile)
+            if profile is None:
+                profile = default_profile(
+                    n_chips=self.farm.n_chips,
+                    lanes_per_chip=self.farm.lanes_per_chip,
+                    pool_workers=max(pool_workers, 1),
+                    pool_solver=self.cfg.solver,
+                )
+            spill_pool = ThreadPoolBackend(
+                self.cfg.solver, workers=max(pool_workers, 1),
+                host_power_w=profile.model("pool").power_w,
+            )
+            self.router = BackendRouter(
+                {"farm": self.farm, "pool": spill_pool}, profile,
+                RouterConfig(objective=route_objective,
+                             quality_floor=quality_floor, primary="farm"),
+            )
         if admission is None:  # default: admit everything, just count it
             admission = AdmissionConfig(deadline_feasibility=False)
         self.admission = AdmissionController(
@@ -212,6 +284,7 @@ class SummarizationEngine:
             seconds_per_solve=getattr(
                 getattr(self.backend, "hardware", None), "seconds_per_solve", 0.0
             ),
+            router=self.router,
         )
         self._seed = seed
         self._base_key = jax.random.key(seed)
@@ -291,8 +364,13 @@ class SummarizationEngine:
             self._new.notify_all()
         if driver is not None:
             driver.join(timeout=600.0)
-        if not already and self.backend is not None:
-            self.backend.close()
+        if not already:
+            if self.backend is not None:
+                self.backend.close()
+            if self.router is not None:
+                for be in self.router.backends.values():
+                    if be is not self.backend:
+                        be.close()
 
     def __enter__(self) -> "SummarizationEngine":
         return self
@@ -356,16 +434,64 @@ class SummarizationEngine:
 
     def _admit_work(self, req: SummarizeRequest, key) -> _Work:
         sents = split_sentences(req.text)
-        ticket = self.admission.admit(
+        try:
+            ticket = self._admit_ticket(req, sents)
+        except EngineOverloadedError as exc:
+            # shed="evict-lowest": at the depth cap, try to evict one queued
+            # request that ranks strictly below the newcomer, then re-admit.
+            if (getattr(exc, "reason", "") != "depth"
+                    or self.admission.config.shed != "evict-lowest"
+                    or not self._evict_for(req.priority, req.deadline)):
+                raise
+            ticket = self._admit_ticket(req, sents)
+        return _Work(req=req, key=key, sents=sents, reads=ticket.reads,
+                     degraded=ticket.degraded,
+                     future=ResponseFuture(self, req.request_id),
+                     backend_name=ticket.backend,
+                     predicted_seconds=ticket.predicted_seconds,
+                     sim_at_admit=ticket.sim_at_admit)
+
+    def _admit_ticket(self, req: SummarizeRequest, sents: List[str]):
+        return self.admission.admit(
             req.request_id,
             self._estimate_job_lanes(len(sents), req.m),
             self.cfg.reads,
             req.deadline,
             self.backend.sim_now() if self.backend is not None else 0.0,
+            priority=req.priority,
+            steps=self.cfg.steps,
+            iterations=self.cfg.iterations,
         )
-        return _Work(req=req, key=key, sents=sents, reads=ticket.reads,
-                     degraded=ticket.degraded,
-                     future=ResponseFuture(self, req.request_id))
+
+    def _evict_for(self, priority: int, deadline: Optional[float]) -> bool:
+        """Evict the most-evictable QUEUED request that ranks strictly below
+        a ``(priority, deadline)`` newcomer: lowest priority first, slackest
+        deadline (latest, with none-at-all slackest) as the tie-break.  The
+        victim's future fails with :class:`RequestEvicted` and its admitted
+        work is released (counted in ``AdmissionStats.evicted``).  Returns
+        False when nothing queued ranks below the newcomer -- the newcomer
+        then sheds exactly as under ``shed="reject-new"``."""
+        def rank(prio, dl):  # greater tuple = more evictable
+            return (-prio, math.inf if dl is None else dl)
+
+        mine = rank(priority, deadline)
+        with self._new:
+            victim_i = None
+            victim_rank = mine
+            for i, w in enumerate(self._queue):
+                r = rank(w.req.priority, w.req.deadline)
+                if r > victim_rank:
+                    victim_i, victim_rank = i, r
+            if victim_i is None:
+                return False
+            victim = self._queue.pop(victim_i)
+        self.admission.note_eviction(victim.req.request_id)
+        victim.future._finish(None, RequestEvicted(
+            f"request {victim.req.request_id} (priority "
+            f"{victim.req.priority}) was evicted from the queue to admit a "
+            f"higher-ranked request at the depth cap"
+        ))
+        return True
 
     def _enqueue_works(self, works: List[_Work]) -> None:
         with self._new:
@@ -437,25 +563,41 @@ class SummarizationEngine:
                     self._resolve(work, None, exc)
             active = still
             if active and self.backend is not None:
-                try:
-                    if self.backend.policy == "manual":
-                        # Manual policy: the driver IS the round barrier --
-                        # one drain packs every active request's jobs.
-                        self.backend.drain()
-                    else:
-                        # Self-draining backends: tell the drive loop this
-                        # round's burst is over (non-blocking); generators
-                        # block on their futures.
-                        self.backend.flush_hint()
-                except Exception:  # noqa: BLE001
-                    # The backend already failed the affected job futures;
-                    # the corresponding generators surface the error on
-                    # their next step.  The driver must outlive it.
-                    traceback.print_exc()
+                # With a router, EVERY routable backend gets its round
+                # barrier -- spilled jobs must resolve too (the host pool's
+                # flush_hint is a no-op; it self-drains).
+                barriers = ([self.backend] if self.router is None
+                            else list(self.router.backends.values()))
+                for be in barriers:
+                    try:
+                        if be.policy == "manual":
+                            # Manual policy: the driver IS the round barrier
+                            # -- one drain packs every active request's jobs.
+                            be.drain()
+                        else:
+                            # Self-draining backends: tell the drive loop
+                            # this round's burst is over (non-blocking);
+                            # generators block on their futures.
+                            be.flush_hint()
+                    except Exception:  # noqa: BLE001
+                        # The backend already failed the affected job
+                        # futures; the corresponding generators surface the
+                        # error on their next step.  The driver must outlive
+                        # it.
+                        traceback.print_exc()
 
     def _resolve(self, work: _Work, response: Optional[SummarizeResponse],
                  error: Optional[BaseException] = None) -> None:
-        self.admission.on_done(work.req.request_id)
+        # Realized completion feeds admission's estimate-error tracking, but
+        # only on the primary backend's clock -- a pool-served request's
+        # sim_completed lives on the pool's wall clock and would poison the
+        # error distribution.
+        realized = None
+        if (response is not None and response.sim_completed > 0.0
+                and (self.router is None
+                     or work.backend_name == self.router.primary)):
+            realized = response.sim_completed
+        self.admission.on_done(work.req.request_id, realized=realized)
         if response is not None:
             response.degraded = work.degraded
         work.future._finish(response, error)
@@ -478,18 +620,53 @@ class SummarizationEngine:
                                          encoder=self.encoder)
         if problem.n > COBI_MAX_SPINS and not cfg.decompose:
             cfg = dataclasses.replace(cfg, decompose=True)
+        backend_used = None
+        realized_seconds = 0.0
+        eff_deadline = req.deadline
         if self.backend is not None:
+            backend = self.backend
+            route_hook = None
+            if self.router is not None:
+                name = work.backend_name or self.router.primary
+                backend = self.router.backends[name]
+                backend_used = name
+                if req.deadline is not None and backend is not self.backend:
+                    # Backends keep independent clocks (farm sim clock vs
+                    # pool wall clock): carry the deadline over as remaining
+                    # slack from the primary clock at admission.
+                    eff_deadline = (backend.sim_now()
+                                    + (req.deadline - work.sim_at_admit))
+                if cfg.decompose:
+                    route_hook = self._window_route(work, cfg)
+            t_serve0 = backend.sim_now()
             report = yield from iter_solve_es(
-                problem, work.key, cfg, backend=self.backend,
-                priority=req.priority, deadline=req.deadline,
-                tag=req.request_id,
+                problem, work.key, cfg, backend=backend,
+                priority=req.priority, deadline=eff_deadline,
+                tag=req.request_id, route=route_hook,
             )
+            if self.router is not None:
+                if report.backend_jobs:  # window-routed: dominant backend
+                    backend_used = max(report.backend_jobs,
+                                       key=report.backend_jobs.get)
+                if report.sim_completed > 0.0:
+                    realized_seconds = max(report.sim_completed - t_serve0,
+                                           0.0)
+                if (realized_seconds > 0.0 and work.predicted_seconds > 0.0
+                        and backend_used == work.backend_name):
+                    # Realized receipts close the loop: the profile's EWMA
+                    # correction learns this backend's live bias.
+                    self.router.observe(
+                        backend_used,
+                        predicted_seconds=work.predicted_seconds,
+                        realized_seconds=realized_seconds,
+                    )
         else:
             report = solve_es(problem, work.key, cfg)
         hw = self._hardware()
         host_eval = report.solver_invocations * cfg.reads * hw.host_eval_seconds
-        if report.chip_seconds > 0.0:  # farm receipts: lane-shared chip time
-            t_solver = report.chip_seconds + host_eval
+        metered = report.chip_seconds + report.host_seconds
+        if metered > 0.0:  # receipts: lane-shared chip time / worker wall time
+            t_solver = metered + host_eval
             e_solver = report.chip_energy_joules + host_eval * hw.host_power_w
         else:
             solves = report.solver_invocations * cfg.reads
@@ -504,8 +681,8 @@ class SummarizationEngine:
                 normalized_objective(report.objective, reference_bounds(problem))
             )
         deadline_met = None
-        if req.deadline is not None and report.sim_completed > 0.0:
-            deadline_met = report.sim_completed <= req.deadline
+        if eff_deadline is not None and report.sim_completed > 0.0:
+            deadline_met = report.sim_completed <= eff_deadline
         summary = [sents[i] for i in np.nonzero(report.selection)[0]]
         return SummarizeResponse(
             request_id=req.request_id,
@@ -522,4 +699,30 @@ class SummarizationEngine:
             sim_completed=report.sim_completed,
             deadline_met=deadline_met,
             reads_used=cfg.reads,
+            backend_used=backend_used,
+            predicted_seconds=work.predicted_seconds,
+            realized_seconds=realized_seconds,
         )
+
+    def _window_route(self, work: _Work, cfg: SolveConfig):
+        """Per-decomposition-window route hook for :func:`iter_solve_es`.
+
+        Re-decides each window against LIVE capacity hints (the admission
+        decision vouched for the request; windows may still spill off an
+        overloaded farm mid-request).  Converts the request deadline to the
+        winning backend's clock via remaining primary-clock slack."""
+        req = work.req
+
+        def route(n: int, reads: int):
+            slack = (None if req.deadline is None
+                     else req.deadline - self.backend.sim_now())
+            name, be = self.router.route_window(
+                n, reads, steps=cfg.steps, iterations=cfg.iterations,
+                deadline_slack=slack,
+            )
+            deadline = req.deadline
+            if deadline is not None and be is not self.backend:
+                deadline = be.sim_now() + max(slack, 0.0)
+            return name, be, deadline
+
+        return route

@@ -30,6 +30,7 @@ import dataclasses
 import importlib
 import itertools
 import threading
+import time
 import traceback
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, List, Optional, Protocol, runtime_checkable
@@ -152,26 +153,53 @@ class SolverBackend(Protocol):
 
     def sim_now(self) -> float: ...
 
+    def capacity_hint(self) -> "CapacityHint": ...
+
     def close(self) -> None: ...
 
 
 @dataclasses.dataclass(frozen=True)
 class PoolReceipt:
-    """Zero-hardware receipt for jobs run by :class:`ThreadPoolBackend`.
+    """Host-side accounting for jobs run by :class:`ThreadPoolBackend`.
 
-    ``chip_seconds == 0`` is the signal consumers key on to fall back to the
-    per-invocation hardware model (see ``SummarizationEngine``); bytes are 0
-    because host solvers never cross a device boundary.
+    ``host_seconds`` is the MEASURED worker wall time of the solve and
+    ``energy_joules`` the simple host energy model (``host_power_w`` watts x
+    wall time), so mixed-backend serving bills chip jobs and host jobs
+    through one receipt stream.  ``chip_seconds`` stays 0 (there is no chip)
+    and bytes are 0 because host solvers never cross a device boundary.
+    ``sim_completed``/``sim_latency_seconds`` are on the pool's own clock
+    (wall seconds since backend construction -- host wall time IS this
+    backend's hardware clock), matching the farm receipt's submit->done
+    semantics.
     """
 
     job_id: int
     tag: Optional[int] = None
     chip_seconds: float = 0.0
+    host_seconds: float = 0.0  # measured worker wall time of the solve
     energy_joules: float = 0.0
     bytes_h2d: int = 0
     bytes_d2h: int = 0
     sim_latency_seconds: float = 0.0
     sim_completed: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityHint:
+    """A backend's live-load snapshot for routers and admission layers.
+
+    ``est_queue_seconds`` is the backend's own estimate of how long a job
+    submitted NOW waits before service begins (farm: chip cycles of queued
+    tiers; pool: queued jobs x observed mean job seconds / workers);
+    ``parallelism`` is the number of concurrent service slots (chips or
+    worker threads); ``kind`` tells consumers which clock the estimate
+    lives on (``"sim"`` chips vs ``"host"`` wall time).
+    """
+
+    pending_jobs: int
+    est_queue_seconds: float
+    parallelism: int
+    kind: str = "host"  # "sim" | "host"
 
 
 class PoolJobCancelled(RuntimeError):
@@ -313,26 +341,34 @@ class ThreadPoolBackend:
     engine driver loop serves every solver.  Futures resolve as workers
     finish -- the backend is self-draining (``policy="pool"``); ``drain()``
     is therefore a blocking flush (wait for everything in flight) and
-    ``flush_hint()`` a no-op.  Receipts are :class:`PoolReceipt` zeros:
-    callers fall back to the per-invocation hardware model, exactly like the
-    legacy inline path, so accounting is unchanged and results are
-    bit-identical (each job solves from its own key; worker scheduling
-    cannot reorder anything a result depends on).
+    ``flush_hint()`` a no-op.  Receipts carry REAL host accounting: measured
+    worker wall time per job plus the W x wall-time host energy model
+    (``host_power_w``), on the pool's own clock (wall seconds since
+    construction), so mixed farm/pool serving bills both sides consistently.
+    Results are bit-identical to the inline path (each job solves from its
+    own key; worker scheduling cannot reorder anything a result depends on).
     """
 
     def __init__(self, solver: str = "tabu", *, workers: int = 4,
-                 solve_fn: Optional[Callable[..., SolverResult]] = None):
+                 solve_fn: Optional[Callable[..., SolverResult]] = None,
+                 host_power_w: float = 20.0):
         self.solver = solver
         self.policy = "pool"
+        self.workers = max(1, workers)
+        self.host_power_w = host_power_w
         self._fn = solve_fn if solve_fn is not None else ising_solver(solver)
         self._pool = ThreadPoolExecutor(
-            max_workers=max(1, workers), thread_name_prefix=f"{solver}-pool"
+            max_workers=self.workers, thread_name_prefix=f"{solver}-pool"
         )
         self._ids = itertools.count()
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
         self._inflight: set = set()
         self._closed = False
+        self._t0 = time.monotonic()
+        # Observed mean worker seconds per job (EWMA), feeding the
+        # capacity_hint queue estimate; 0 until the first job completes.
+        self._avg_job_seconds = 0.0
 
     def submit(
         self,
@@ -357,12 +393,28 @@ class ThreadPoolBackend:
             job_id = next(self._ids)
             fut = PoolFuture(job_id, tag)
             self._inflight.add(job_id)
+        submitted = self.sim_now()
 
         def run():
             try:
+                t0 = time.perf_counter()
                 res = self._fn(ising, key, reads=reads, steps=steps,
                                check=bool(check), reduce="none", **solve_kwargs)
-                fut._finish(res.reduced(reduce), PoolReceipt(job_id, tag))
+                wall = time.perf_counter() - t0
+                done = self.sim_now()
+                with self._lock:
+                    self._avg_job_seconds = (
+                        wall if self._avg_job_seconds == 0.0
+                        else 0.8 * self._avg_job_seconds + 0.2 * wall
+                    )
+                receipt = PoolReceipt(
+                    job_id, tag,
+                    host_seconds=wall,
+                    energy_joules=wall * self.host_power_w,
+                    sim_latency_seconds=done - submitted,
+                    sim_completed=done,
+                )
+                fut._finish(res.reduced(reduce), receipt)
             except BaseException as exc:  # noqa: BLE001 -- fail the future
                 fut._finish(error=exc)
             finally:
@@ -395,7 +447,21 @@ class ThreadPoolBackend:
             return len(self._inflight)
 
     def sim_now(self) -> float:
-        return 0.0  # host solvers have no simulated hardware clock
+        """The pool's hardware clock IS host wall time (seconds since
+        construction); receipts' ``sim_completed`` live on this clock."""
+        return time.monotonic() - self._t0
+
+    def capacity_hint(self) -> CapacityHint:
+        """Live-load snapshot: queued jobs beyond the worker count wait
+        roughly one observed mean job time per ``workers`` of backlog."""
+        with self._lock:
+            pending = len(self._inflight)
+            backlog = max(pending - self.workers, 0)
+            wait = backlog * self._avg_job_seconds / self.workers
+        return CapacityHint(
+            pending_jobs=pending, est_queue_seconds=wait,
+            parallelism=self.workers, kind="host",
+        )
 
     def close(self) -> None:
         with self._lock:

@@ -1,0 +1,334 @@
+"""Cost-model backend router: calibration profiles, routing decisions, and
+the spill path's bit-identity guarantee.
+
+The load-bearing invariants:
+
+* Routing never changes results: a routed engine (whether its decisions
+  land on the farm or spill every job to the host pool) produces summaries
+  bit-identical to the unrouted engine at the same seed -- jobs draw from
+  their own keys, so WHERE they anneal is invisible to WHAT they return.
+* A saved ``CalibrationProfile`` reproduces its predictions and therefore
+  its routing decisions exactly (the checked-in-artifact story).
+* ``observe()``'s EWMA correction is a fixed point: feeding a consistently
+  biased realization converges predictions onto the realized values.
+* Pool receipts bill real measured work (worker wall seconds x host watts),
+  not the hardware model; admission audits its own completion estimates and
+  ``auto_watermark`` widens the margin from observed lateness.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import SolveConfig
+from repro.core.formulation import improved_ising
+from repro.core.rounding import quantize_ising
+from repro.data.synthetic import synthetic_benchmark, synthetic_document
+from repro.farm import CobiFarm
+from repro.serving import (
+    AdmissionConfig,
+    EngineOverloadedError,
+    RequestEvicted,
+    SummarizationEngine,
+    SummarizeRequest,
+)
+from repro.serving.admission import AdmissionController
+from repro.serving.calibration import (
+    CalibrationProfile,
+    default_profile,
+    fit_host_latency,
+)
+from repro.serving.router import BackendRouter, InfeasibleRoute, RouterConfig
+from repro.solvers.base import ThreadPoolBackend
+
+import jax
+
+CFG = SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14,
+                  steps=100, p=20, q=10)
+# 70 sentences forces decomposition, so spill tests also cover the
+# per-window routing hook on the decomposed driver.
+DOCS = [" ".join(synthetic_document(600 + i, n)) for i, n in
+        enumerate([12, 70, 18])]
+
+
+def _requests(m=5):
+    return [SummarizeRequest(text=d, m=m, request_id=i + 1)
+            for i, d in enumerate(DOCS)]
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(a.selection, b.selection)
+    assert a.objective == b.objective
+
+
+def _tiny_ising(seed=7, n=12):
+    p = synthetic_benchmark(seed, n, 4, lam=0.5)
+    return quantize_ising(improved_ising(p), "deterministic",
+                          int_range=14).ising
+
+
+@pytest.fixture(scope="module")
+def unrouted_responses():
+    eng = SummarizationEngine(CFG, n_chips=2)
+    out = eng.run_batch(_requests(), seed=0)
+    eng.close()
+    return out
+
+
+# --------------------------------------------------------- route decisions
+
+
+def test_min_energy_prefers_farm():
+    prof = default_profile(n_chips=2, pool_workers=2)
+    router = BackendRouter({"farm": object(), "pool": object()}, prof,
+                           RouterConfig(primary="farm"))
+    d = router.decide([(14, 8), (14, 8)], steps=100, queued_seconds={})
+    assert d.backend == "farm"
+    assert d.reason == "objective"
+    assert 0.0 < d.predicted_seconds < 1.0
+    assert d.predicted_energy > 0.0
+
+
+def test_farm_overload_spills_to_pool():
+    prof = default_profile(n_chips=2, pool_workers=2)
+    router = BackendRouter({"farm": object(), "pool": object()}, prof,
+                           RouterConfig(primary="farm"))
+    # Farm already owes 1s of queued work against a 0.5s slack; the pool
+    # (idle, ~10ms/invocation) is the only feasible backend.
+    d = router.decide([(14, 8)], steps=100, deadline_slack=0.5,
+                      queued_seconds={"farm": 1.0, "pool": 0.0})
+    assert d.backend == "pool"
+    assert d.reason == "spill"
+    assert router.stats()["spills"] == 1
+
+
+def test_no_feasible_backend_raises():
+    prof = default_profile(n_chips=2, pool_workers=2)
+    router = BackendRouter({"farm": object(), "pool": object()}, prof,
+                           RouterConfig(primary="farm"))
+    with pytest.raises(InfeasibleRoute):
+        router.decide([(14, 8)], steps=100, deadline_slack=1e-9,
+                      queued_seconds={"farm": 1.0, "pool": 1.0})
+
+
+def test_quality_floor_excludes_backend():
+    prof = default_profile(n_chips=2, pool_workers=2)
+    # Pool is 'faster' than the farm but only succeeds half the time per
+    # iteration; a tight quality floor must veto it despite min-latency.
+    prof.models["pool"].lat_coef = (1e-6, 0.0, 0.0)
+    prof.models["pool"].quality_n = (10, 20)
+    prof.models["pool"].quality_p = (0.5, 0.5)
+    router = BackendRouter(
+        {"farm": object(), "pool": object()}, prof,
+        RouterConfig(objective="min-latency", primary="farm"),
+    )
+    fast = router.decide([(14, 8)], steps=100, iterations=2,
+                         queued_seconds={})
+    assert fast.backend == "pool"  # no floor: latency wins
+    guarded = router.decide([(14, 8)], steps=100, iterations=2,
+                            queued_seconds={}, quality_floor=0.1)
+    assert guarded.backend == "farm"  # (1-0.5)^2 = 0.25 > 0.1
+    assert guarded.predicted_quality_gap <= 0.1
+
+
+# ------------------------------------------------- profile artifact / fits
+
+
+def test_profile_roundtrip_reproduces_decisions(tmp_path):
+    prof = default_profile(n_chips=4, pool_workers=2)
+    prof.models["pool"].lat_coef = (1e-4, 2e-5, 3e-7)
+    prof.models["pool"].quality_n = (10, 40)
+    prof.models["pool"].quality_p = (0.75, 0.9)
+    prof.models["farm"].ewma_latency = 1.25
+    path = tmp_path / "profile.json"
+    prof.save(str(path))
+    back = CalibrationProfile.load(str(path))
+    assert back.to_json() == prof.to_json()
+
+    cases = [
+        dict(jobs=[(12, 8)], deadline_slack=None, queued_seconds={}),
+        dict(jobs=[(40, 48), (20, 8)], deadline_slack=0.05,
+             queued_seconds={"farm": 0.04}),
+        dict(jobs=[(30, 8)] * 6, deadline_slack=1.0,
+             queued_seconds={"farm": 0.2, "pool": 0.0}),
+    ]
+    for cfg in (RouterConfig(primary="farm"),
+                RouterConfig(objective="min-latency", primary="farm")):
+        r1 = BackendRouter({"farm": object(), "pool": object()}, prof, cfg)
+        r2 = BackendRouter({"farm": object(), "pool": object()}, back, cfg)
+        for case in cases:
+            jobs = case.pop("jobs") if "jobs" in case else None
+            d1 = r1.decide(jobs, steps=100, **case)
+            d2 = r2.decide(jobs, steps=100, **case)
+            case["jobs"] = jobs
+            assert d1 == d2
+
+
+def test_unknown_schema_version_rejected():
+    with pytest.raises(ValueError, match="schema"):
+        CalibrationProfile({}, version=99)
+
+
+def test_fit_host_latency_recovers_quadratic():
+    c0, c1, c2 = 2e-3, 1e-4, 5e-6
+    samples = [(n, c0 + c1 * n + c2 * n * n) for n in (5, 10, 20, 40, 60)]
+    fit = fit_host_latency(samples)
+    np.testing.assert_allclose(fit, (c0, c1, c2), rtol=1e-6)
+
+
+def test_ewma_converges_on_biased_model():
+    prof = default_profile(pool_workers=2)
+    jobs = [(20, 8)]
+    bias = 3.0
+    true_seconds = bias * prof.model("pool").request_seconds(jobs, 100)
+    for _ in range(40):
+        pred = prof.model("pool").request_seconds(jobs, 100)
+        prof.observe("pool", predicted_seconds=pred,
+                     realized_seconds=true_seconds)
+    final = prof.model("pool").request_seconds(jobs, 100)
+    # Converged onto the realized latency; the correction factor carries
+    # the whole bias and the update has reached its fixed point.
+    assert abs(final - true_seconds) / true_seconds < 0.05
+    assert abs(prof.model("pool").ewma_latency - bias) < 0.2
+
+
+# --------------------------------------------------- engine-level routing
+
+
+def test_routed_engine_bit_identical_to_unrouted(unrouted_responses):
+    """Default profile: every decision lands on the farm (min-energy), and
+    summaries match the unrouted engine bit-for-bit."""
+    prof = default_profile(n_chips=2, pool_workers=2)
+    eng = SummarizationEngine(CFG, n_chips=2, routing=True, profile=prof)
+    got = eng.run_batch(_requests(), seed=0)
+    stats = eng.router.stats()
+    eng.close()
+    assert stats["decisions"]["pool"] == 0
+    assert stats["decisions"]["farm"] > 0
+    for a, b in zip(unrouted_responses, got):
+        _assert_same(a, b)
+        assert b.backend_used == "farm"
+
+
+def test_spill_to_pool_bit_identical(unrouted_responses):
+    """A profile that prices the pool at ~zero energy routes EVERY job to
+    the host pool -- and the summaries still match the farm-served run
+    bit-for-bit, including the decomposed request's window waves."""
+    prof = default_profile(n_chips=2, pool_workers=2)
+    prof.models["pool"].power_w = 1e-12  # min-energy now always picks pool
+    eng = SummarizationEngine(CFG, n_chips=2, routing=True, profile=prof)
+    got = eng.run_batch(_requests(), seed=0)
+    stats = eng.router.stats()
+    eng.close()
+    assert stats["decisions"]["farm"] == 0
+    assert stats["decisions"]["pool"] > 0
+    for a, b in zip(unrouted_responses, got):
+        _assert_same(a, b)
+        assert b.backend_used == "pool"
+        # Metered accounting: pool receipts bill measured wall seconds.
+        assert b.projected_solver_seconds > 0.0
+
+
+def test_routed_response_reports_prediction_and_realization():
+    prof = default_profile(n_chips=2, pool_workers=2)
+    eng = SummarizationEngine(CFG, n_chips=2, routing=True, profile=prof)
+    fut = eng.submit(DOCS[0], m=5)
+    resp = fut.result(timeout=120.0)
+    eng.close()
+    assert resp.backend_used == "farm"
+    assert resp.predicted_seconds > 0.0
+    assert resp.realized_seconds > 0.0
+
+
+def test_routing_requires_farm_backend():
+    with pytest.raises(ValueError, match="routing"):
+        SummarizationEngine(CFG, n_chips=0, routing=True)
+
+
+# ------------------------------------------------------- receipts / hints
+
+
+def test_pool_receipts_bill_measured_work():
+    inst = _tiny_ising()
+    with ThreadPoolBackend("cobi", workers=1, host_power_w=20.0) as be:
+        fut = be.submit(inst, jax.random.key(3), reads=6, steps=100,
+                        reduce="best")
+        fut.result(timeout=60.0)
+        rec = fut.receipt()
+    assert rec.chip_seconds == 0.0
+    assert rec.host_seconds > 0.0
+    np.testing.assert_allclose(rec.energy_joules, rec.host_seconds * 20.0)
+
+
+def test_farm_capacity_hint_tracks_pending_work():
+    farm = CobiFarm(2)
+    assert farm.capacity_hint().pending_jobs == 0
+    inst = _tiny_ising()
+    futs = [farm.submit(inst, jax.random.key(i), reads=8, steps=100,
+                        reduce="best") for i in range(3)]
+    hint = farm.capacity_hint()
+    assert hint.pending_jobs == 3
+    assert hint.est_queue_seconds > 0.0
+    assert hint.kind == "sim"
+    farm.drain()
+    for f in futs:
+        f.result(timeout=60.0)
+    assert farm.capacity_hint().est_queue_seconds == 0.0
+    farm.close()
+
+
+# ------------------------------------------- admission audit and eviction
+
+
+def test_admission_estimate_errors_and_auto_watermark():
+    ctrl = AdmissionController(
+        AdmissionConfig(auto_watermark=True),
+        lanes_per_chip=64, n_chips=4, seconds_per_solve=200e-6,
+    )
+    assert ctrl.effective_watermark() == 0.0
+    for i in range(6):
+        t = ctrl.admit(i, [14, 14], 8, 1.0, 0.0)
+        ctrl.on_done(i, realized=t.est_completion + 0.05)  # 50ms late
+    errs = ctrl.estimate_errors()
+    assert errs["n"] == 6
+    assert errs["p90"] == pytest.approx(0.05)
+    # The margin widened to the observed lateness quantile...
+    assert ctrl.effective_watermark() == pytest.approx(0.05)
+    # ...so a deadline that ignores the measured bias is now rejected.
+    t = ctrl.admit(100, [14, 14], 8, 1.0, 0.0)
+    with pytest.raises(EngineOverloadedError):
+        ctrl.admit(101, [14, 14], 8, t.est_completion + 0.01, 0.0)
+
+
+def test_evict_lowest_priority_makes_room():
+    eng = SummarizationEngine(
+        CFG, n_chips=2,
+        admission=AdmissionConfig(max_queue_depth=2, shed="evict-lowest"),
+    )
+    # Park a dead thread as the driver so submissions stay QUEUED (nothing
+    # is served) and the eviction scan sees a deterministic queue.
+    parked = threading.Thread(target=lambda: None)
+    parked.start()
+    parked.join()
+    with eng._new:
+        eng._driver = parked
+    f_low = eng.submit(DOCS[0], m=5, priority=0)
+    f_mid = eng.submit(DOCS[2], m=5, priority=3)
+    # Depth cap reached; a HIGHER-priority request evicts the lowest.
+    f_high = eng.submit(DOCS[2], m=5, priority=5)
+    with pytest.raises(RequestEvicted):
+        f_low.result(timeout=5.0)
+    stats = eng.admission.stats()
+    assert stats.evicted == 1
+    assert stats.depth == 2
+    # A lower-priority newcomer cannot evict anyone and is shed instead.
+    with pytest.raises(EngineOverloadedError):
+        eng.submit(DOCS[2], m=5, priority=1)
+    # Un-park the driver and let the surviving requests serve to completion.
+    with eng._new:
+        eng._driver = None
+    eng._enqueue_works([])
+    assert f_mid.result(timeout=120.0).summary
+    assert f_high.result(timeout=120.0).summary
+    eng.close()
