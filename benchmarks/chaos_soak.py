@@ -1,0 +1,228 @@
+"""Chaos soak: serving goodput and recovery guarantees under injected faults.
+
+Serves the same request mix three times through the routed, retry-enabled
+engine (COBI farm primary, same-solver host pool as failover target):
+
+* ``chaos_baseline`` -- fault-free reference run; its responses are the
+  bit-identity oracle for the chaos scenarios.
+* ``chaos_drain_faults`` -- 10% of drain launches time out and two of the
+  four chips are persistently dead (breakers quarantine them); jobs
+  recover by deterministic retry and pool failover.
+* ``chaos_readout_faults`` -- readout bit-flips (host-side validation
+  repairs them in place), stuck lanes, and a tail of unrepairable corrupt
+  readouts that must burn retry budget.
+
+Every scenario asserts the robustness acceptance criteria and EMITS them
+as metrics so ``benchmarks/compare.py`` can gate CI on them:
+
+* ``stranded_futures`` -- response futures still pending after the run
+  plus requests that finished neither with a response nor a typed error.
+  Must be exactly 0 (compare.py hard-fails otherwise).
+* ``corrupt_escapes`` -- successful responses whose selection/objective
+  differ from the fault-free oracle.  Validation guarantees corrupt
+  readouts surface as typed faults, and recovery guarantees a recovered
+  job is bit-identical, so this must be exactly 0.
+* Fault injection is a pure function of the plan seed: each chaos
+  scenario runs TWICE and the outcome signatures (per-request status,
+  selection bytes, retry/failover counts) must match exactly -- the
+  benchmark aborts on nondeterminism.
+
+CLI: ``--tiny`` shrinks the mix for CI smoke (the checked-in
+``benchmarks/BENCH_chaos_soak.json`` baseline is the tiny run); ``--json
+PATH`` dumps every metric for the compare.py gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+# Sentence counts per synthetic doc; >=59 would decompose -- kept at chip
+# size so the mix exercises multi-bin packing across the 4 chips instead.
+SIZES = [14, 18, 12, 26, 30, 22, 34, 38, 16, 20, 24, 28]
+TINY_SIZES = SIZES[:6]
+DEADLINE_SLACK = 0.5  # sim seconds; roomy so the budget never blocks retries
+
+
+def _emit(results, name, us, derived, **metrics):
+    results[name] = {"us_per_call": us, "derived": derived, **metrics}
+    emit(name, us, derived)
+
+
+def _outcome_signature(status, resp_or_exc):
+    """Hashable per-request outcome for the determinism check."""
+    if status == "ok":
+        r = resp_or_exc
+        return ("ok", r.selection.tobytes(), float(r.objective),
+                int(r.retries), bool(r.failed_over))
+    exc = resp_or_exc
+    return ("failed", type(exc).__name__,
+            tuple(sorted(getattr(exc, "faults", {}).items())))
+
+
+def _serve_once(cfg, docs, plan, retry, n_chips):
+    from repro.serving import (
+        RequestFailed,
+        SummarizationEngine,
+        SummarizeRequest,
+    )
+
+    eng = SummarizationEngine(cfg, n_chips=n_chips, routing=True,
+                              pool_workers=2, faults=plan, retry=retry)
+    # submit_batch admits everything before the driver adopts any of it, so
+    # routing/job-id assignment -- and therefore the seeded fault draws --
+    # are a pure function of the mix (the determinism gate depends on this).
+    reqs = [SummarizeRequest(text=doc, m=5, request_id=i + 1,
+                             deadline=DEADLINE_SLACK)  # sim clock starts at 0
+            for i, doc in enumerate(docs)]
+    t0 = time.perf_counter()
+    futs = eng.submit_batch(reqs, seed=0)
+    outcomes = []
+    for fut in futs:
+        try:
+            outcomes.append(("ok", fut.result(timeout=600.0)))
+        except RequestFailed as exc:
+            outcomes.append(("failed", exc))
+    wall = time.perf_counter() - t0
+    # Stranded = anything the recovery/typed-failure machinery failed to
+    # terminate: a future still pending, or farm-side orphaned job state.
+    stranded = sum(1 for fut in futs if not fut.done())
+    stranded += eng.farm.pending_jobs()
+    fstats = eng.farm.stats()
+    rstats = eng.router.stats()
+    adm_depth = eng.admission.depth()
+    eng.close()
+    return {
+        "outcomes": outcomes,
+        "wall": wall,
+        "stranded": stranded + adm_depth,
+        "fault_counts": dict(fstats.fault_counts),
+        "quarantined": list(fstats.quarantined),
+        "failovers": rstats["failovers"],
+        "signature": [_outcome_signature(s, x) for s, x in outcomes],
+    }
+
+
+def _scenario(results, name, cfg, docs, plan, retry, n_chips, oracle):
+    """Run (twice, for the determinism gate), verify, and emit one scenario."""
+    run1 = _serve_once(cfg, docs, plan, retry, n_chips)
+    if plan is not None:
+        run2 = _serve_once(cfg, docs, plan, retry, n_chips)
+        if run1["signature"] != run2["signature"]:
+            raise RuntimeError(
+                f"{name}: fault injection is nondeterministic -- two runs of "
+                f"the same seeded plan produced different outcomes"
+            )
+    outcomes = run1["outcomes"]
+    ok = [r for s, r in outcomes if s == "ok"]
+    failed = [e for s, e in outcomes if s == "failed"]
+    corrupt_escapes = 0
+    if oracle is not None:
+        for (status, resp), ref in zip(outcomes, oracle):
+            if status != "ok":
+                continue
+            if (resp.selection.tobytes() != ref.selection.tobytes()
+                    or resp.objective != ref.objective):
+                corrupt_escapes += 1
+    deadline_met = sum(1 for r in ok if r.deadline_met)
+    retries = sum(r.retries for r in ok)
+    faults_seen = sum(r.faults_seen for r in ok) + sum(
+        sum(e.faults.values()) for e in failed)
+    repaired = run1["fault_counts"].get("repaired", 0)
+    rps = len(docs) / run1["wall"]
+    goodput = len(ok) / run1["wall"]
+    us = run1["wall"] / len(docs) * 1e6
+    derived = (
+        f"goodput_rps={goodput:.2f};ok={len(ok)}/{len(docs)};"
+        f"retries={retries};failovers={run1['failovers']};"
+        f"repaired={repaired};quarantined={len(run1['quarantined'])};"
+        f"stranded={run1['stranded']};escapes={corrupt_escapes}"
+    )
+    _emit(
+        results, name, us, derived,
+        rps=rps,
+        goodput_rps=goodput,
+        ok_rate=len(ok) / len(docs),
+        deadline_met_rate=deadline_met / max(1, len(ok)),
+        retries=retries,
+        failovers=run1["failovers"],
+        repaired=repaired,
+        faults_seen=faults_seen,
+        quarantined=len(run1["quarantined"]),
+        stranded_futures=run1["stranded"],
+        corrupt_escapes=corrupt_escapes,
+    )
+    return ok
+
+
+def run(tiny: bool = False, json_path: str | None = None) -> dict:
+    from repro.core import SolveConfig
+    from repro.data.synthetic import synthetic_document
+    from repro.farm import FaultPlan
+    from repro.serving import RetryPolicy
+
+    steps = 120 if tiny else 300
+    iterations = 2 if tiny else 3
+    cfg = SolveConfig(solver="cobi", iterations=iterations, reads=8,
+                      int_range=14, steps=steps)
+    sizes = TINY_SIZES if tiny else SIZES
+    docs = [" ".join(synthetic_document(300 + i, n))
+            for i, n in enumerate(sizes)]
+    n_chips = 4
+    retry = RetryPolicy(max_retries=3)
+    results: dict = {}
+
+    # Warmup: compile the solve kernels (shape-bucketed by the full mix's
+    # packing) so scenario wall times compare serving work, not jit time.
+    _serve_once(cfg, docs, None, retry, n_chips)
+
+    # Fault-free oracle (also the goodput baseline the chaos rows compare
+    # against in the emitted CSV).
+    oracle = _scenario(results, "chaos_baseline", cfg, docs, None, retry,
+                       n_chips, None)
+    if len(oracle) != len(docs):
+        raise RuntimeError("fault-free baseline must serve every request")
+
+    # 10% drain timeouts + chips 1 and 3 persistently dead.
+    drain_plan = FaultPlan(seed=20, drain_timeout_rate=0.10,
+                           failed_chips=(1, 3))
+    _scenario(results, "chaos_drain_faults", cfg, docs, drain_plan, retry,
+              n_chips, oracle)
+
+    # Readout corruption: repairable bit-flips, stuck lanes, corrupt tail.
+    readout_plan = FaultPlan(seed=21, bitflip_rate=0.15, corrupt_rate=0.05,
+                             stuck_lane_rate=0.01)
+    _scenario(results, "chaos_readout_faults", cfg, docs, readout_plan,
+              retry, n_chips, oracle)
+
+    total_stranded = sum(r["stranded_futures"] for r in results.values())
+    total_escapes = sum(r["corrupt_escapes"] for r in results.values())
+    if total_stranded or total_escapes:
+        raise RuntimeError(
+            f"robustness acceptance violated: stranded_futures="
+            f"{total_stranded}, corrupt_escapes={total_escapes} (must be 0)"
+        )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (fewer/smaller requests)")
+    ap.add_argument("--json", default=None, help="dump metrics to PATH")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(tiny=args.tiny, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,10 @@ that intentionally moves the numbers):
     the CI runner is a noisy shared 2-core box, so wall-clock metrics swing
     far more than any real regression signal.  ``--strict`` promotes
     deviation warnings to failures for local A/B runs on quiet machines.
+  * robustness invariants are exact, not statistical: any scenario whose
+    baseline carries a ``ZERO_METRICS`` entry (stranded futures, corrupt
+    readout escapes -- the chaos soak's acceptance criteria) hard-fails
+    unless the new run reports exactly 0.
 
 Usage::
 
@@ -31,9 +35,24 @@ import sys
 TRACKED = ("rps", "occupancy", "bytes_per_req", "p50_ms", "p95_ms",
            "rps_vs_lockstep", "joules_per_req")
 
+# Invariant metrics that must be EXACTLY zero whenever the baseline scenario
+# reports them: a single stranded future or corrupt-readout escape is a
+# correctness bug, not a perf regression, so there is no tolerance band.
+ZERO_METRICS = ("stranded_futures", "corrupt_escapes")
+
 
 def _check_scenario(name: str, brec: dict, nrec: dict, tolerance: float,
                     failures: list, warnings: list) -> None:
+    for key in ZERO_METRICS:
+        if key not in brec:
+            continue
+        nv = nrec.get(key)
+        if nv is None:
+            failures.append(f"{name}.{key}: invariant metric missing from "
+                            f"new run (must be exactly 0)")
+        elif nv != 0:
+            failures.append(f"{name}.{key}: {nv!r} != 0 -- robustness "
+                            f"invariant violated")
     for key in TRACKED:
         if key not in brec:
             continue

@@ -12,6 +12,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        chaos_soak,
         farm_throughput,
         fig1_formulation,
         fig23_iterations,
@@ -37,6 +38,7 @@ def main() -> None:
         "farm": farm_throughput.run,
         "fused_readout": fused_readout.run,
         "repair": repair_bench.run,
+        "chaos": chaos_soak.run,
     }
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

@@ -90,6 +90,11 @@ class SolveReport:
     # Routed solves: solve jobs per backend name ({} when no route hook ran).
     # A decomposed request's windows may split across backends.
     backend_jobs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Readout-level fault events absorbed by completed jobs (repaired
+    # bit-flips, stuck lanes) -- counted from receipt fault tags.  Terminal
+    # faults (retried/failed-over jobs) are counted by the recovery context,
+    # not here.
+    faults_seen: int = 0
 
 
 @dataclasses.dataclass
@@ -103,6 +108,7 @@ class _Acct:
     sim_completed: float = 0.0
     host_seconds: float = 0.0
     backend_jobs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    faults_seen: int = 0
 
     def add(self, other) -> None:
         """Fold in a receipt or another accumulator (same field names;
@@ -114,6 +120,9 @@ class _Acct:
         self.bytes_h2d += other.bytes_h2d
         self.bytes_d2h += other.bytes_d2h
         self.sim_completed = max(self.sim_completed, other.sim_completed)
+        # Receipts carry per-job fault tags; accumulators carry a count.
+        self.faults_seen += (getattr(other, "faults_seen", 0)
+                             + len(getattr(other, "faults", ()) or ()))
         for name, jobs in getattr(other, "backend_jobs", {}).items():
             self.backend_jobs[name] = self.backend_jobs.get(name, 0) + jobs
 
@@ -300,11 +309,25 @@ def _solve_decomposed(problem: EsProblem, key: Array, cfg: SolveConfig) -> Solve
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class _Round:
+    """One submission round plus the recipe to resubmit any iteration.
+
+    ``resubmit(i, backend=None)`` re-submits iteration ``i``'s EXACT
+    (quantized instance, solve key) -- to the original backend or to a
+    failover one -- so a retried job is bit-identical to the original
+    wherever it lands (results depend only on instance and key).
+    """
+
+    futures: list
+    resubmit: Callable
+
+
 def _submit_iterations(
     problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
     deadline: Optional[float] = None, tag: Optional[int] = None,
-):
-    """Submit the instance's cfg.iterations solve jobs; returns the futures.
+) -> _Round:
+    """Submit the instance's cfg.iterations solve jobs; returns a _Round.
 
     Jobs go in with ``reduce="best"``: the per-iteration argmin-energy read is
     the ONLY thing the reduce consumes, so the farm's fused epilogue keeps
@@ -324,12 +347,17 @@ def _submit_iterations(
         instances = [q.ising for q in quantized]
     else:
         instances = [ising_fp] * cfg.iterations
-    return [
-        backend.submit(inst, k_solve, reads=cfg.reads, steps=cfg.steps,
-                       priority=priority, deadline=deadline, check=check,
-                       reduce="best", tag=tag)
-        for inst, (_, k_solve) in zip(instances, keypairs)
-    ]
+
+    def submit_one(i: int, be=None, dl=deadline):
+        # Failover resubmits drop the deadline: it lives on the PRIMARY
+        # backend's clock and recovery already budgeted the move against it.
+        return (be or backend).submit(
+            instances[i], keypairs[i][1], reads=cfg.reads, steps=cfg.steps,
+            priority=priority, deadline=dl if be is None else None,
+            check=check, reduce="best", tag=tag,
+        )
+
+    return _Round([submit_one(i) for i in range(cfg.iterations)], submit_one)
 
 
 def _reduce_iterations(problem: EsProblem, cfg: SolveConfig, futures):
@@ -355,15 +383,88 @@ def _reduce_iterations(problem: EsProblem, cfg: SolveConfig, futures):
     return best_x, best_obj, curve, acct
 
 
+def _reduce_with_recovery(problem: EsProblem, cfg: SolveConfig, rnd: _Round,
+                          recovery):
+    """Fault-tolerant variant of :func:`_reduce_iterations` (generator).
+
+    Consumes the round's futures; a retryable fault (``recovery.retryable``,
+    i.e. :class:`repro.farm.faults.FarmFault`) sends the job back through
+    ``recovery.decide``: retry on the same backend, fail over, or raise
+    :class:`~repro.serving.recovery.RequestFailed`.  Each pass that
+    resubmitted anything ``yield``s the fresh futures -- the engine's round
+    barrier, after which the next drain runs them.  Results are collected
+    per iteration index and reduced in INDEX order, so the best-of
+    tie-break (strict ``>``) matches the fault-free run bit for bit no
+    matter which attempt finally succeeded.  On any terminal error every
+    remaining future is cancelled/released -- a failing request never
+    strands farm buffers or sibling futures.
+    """
+    futures = list(rnd.futures)
+    k = len(futures)
+    attempts = [0] * k
+    moved = [False] * k          # already failed over?
+    results: list = [None] * k
+    pending = set(range(k))
+    acct = _Acct()
+    try:
+        while pending:
+            retried: list = []
+            for i in sorted(pending):
+                fut = futures[i]
+                try:
+                    result = fut.result()
+                except recovery.retryable as exc:
+                    recovery.note_fault(exc)
+                    fut.release()
+                    be = recovery.decide(attempts[i], exc, failed_over=moved[i])
+                    attempts[i] += 1
+                    if be is not None:
+                        moved[i] = True
+                        acct.tally(recovery.failover_name, 1)
+                    futures[i] = rnd.resubmit(i, be)
+                    retried.append(i)
+                    continue
+                acct.add(fut.receipt())
+                fut.release()
+                results[i] = result
+                pending.discard(i)
+            if retried:
+                # Round barrier: the driver drains before resuming, so the
+                # resubmitted futures are resolvable on the next pass.
+                yield [futures[i] for i in retried]
+    except BaseException:
+        for i in sorted(pending):
+            fut = futures[i]
+            if fut.done():
+                fut.release()
+            else:
+                fut.cancel()
+                fut.add_done_callback(lambda f: f.release())
+        raise
+    best_x, best_obj, curve = None, -np.inf, []
+    for result in results:
+        x = _best_selection(result)
+        if cfg.repair:
+            x = repair_selection(problem, x)
+        obj = _objective_np(problem, x)
+        if obj > best_obj:
+            best_obj, best_x = obj, x
+        curve.append(best_obj)
+    return best_x, best_obj, curve, acct
+
+
 def _iter_iterations(
     problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
     deadline: Optional[float] = None, tag: Optional[int] = None,
+    recovery=None,
 ):
     """Submit the instance's iteration jobs, yield (round barrier), reduce."""
-    futures = _submit_iterations(problem, key, cfg, backend, priority,
-                                 deadline, tag)
-    yield futures
-    return _reduce_iterations(problem, cfg, futures)
+    rnd = _submit_iterations(problem, key, cfg, backend, priority,
+                             deadline, tag)
+    yield rnd.futures
+    if recovery is None:
+        return _reduce_iterations(problem, cfg, rnd.futures)
+    return (yield from _reduce_with_recovery(problem, cfg, rnd, recovery))
 
 
 # Per-window backend picker for routed serving: ``route(n, reads) ->
@@ -386,6 +487,7 @@ def iter_solve_es(
     deadline: Optional[float] = None,
     tag: Optional[int] = None,
     route: Optional[RouteFn] = None,
+    recovery=None,
 ):
     """Generator form of :func:`solve_es` over a :class:`SolverBackend`.
 
@@ -406,6 +508,11 @@ def iter_solve_es(
     router can spill individual windows onto another backend; results stay
     bit-identical (jobs solve from their own keys on any backend running the
     same solver) and ``SolveReport.backend_jobs`` records the split.
+
+    ``recovery`` (a :class:`repro.serving.recovery.RecoveryContext`, or any
+    object with the same ``retryable``/``note_fault``/``decide`` surface)
+    turns typed farm faults into deadline-budgeted retries and failover
+    instead of propagating them; without it the first fault raises.
     """
     backend = backend if backend is not None else farm
     if backend is None:
@@ -418,30 +525,32 @@ def iter_solve_es(
     if cfg.decompose:
         if cfg.pipeline_windows:
             return (yield from _iter_decomposed(
-                problem, key, cfg, backend, priority, deadline, tag, route
+                problem, key, cfg, backend, priority, deadline, tag, route,
+                recovery
             ))
         return (yield from _iter_decomposed_lockstep(
-            problem, key, cfg, backend, priority, deadline, tag, route
+            problem, key, cfg, backend, priority, deadline, tag, route,
+            recovery
         ))
     name = None
     if route is not None:
         name, backend, deadline = route(problem.n, cfg.reads)
     best_x, best_obj, curve, acct = yield from _iter_iterations(
-        problem, key, cfg, backend, priority, deadline, tag
+        problem, key, cfg, backend, priority, deadline, tag, recovery
     )
     acct.tally(name, cfg.iterations)
     return SolveReport(
         best_x, best_obj, np.asarray(curve), cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
         acct.sim_completed, host_seconds=acct.host_seconds,
-        backend_jobs=acct.backend_jobs,
+        backend_jobs=acct.backend_jobs, faults_seen=acct.faults_seen,
     )
 
 
 def _iter_decomposed_lockstep(
     problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
     deadline: Optional[float] = None, tag: Optional[int] = None,
-    route: Optional[RouteFn] = None,
+    route: Optional[RouteFn] = None, recovery=None,
 ):
     """Legacy decomposed backend driver: ONE window in flight at a time.
 
@@ -461,7 +570,8 @@ def _iter_decomposed_lockstep(
         if route is not None:
             w_name, w_backend, w_deadline = route(sub.n, sub_cfg.reads)
         sel, _, _, sub_acct = yield from _iter_iterations(
-            sub.with_m(m), k_sub, sub_cfg, w_backend, priority, w_deadline, tag
+            sub.with_m(m), k_sub, sub_cfg, w_backend, priority, w_deadline,
+            tag, recovery
         )
         acct.add(sub_acct)
         acct.tally(w_name, sub_cfg.iterations)
@@ -477,14 +587,14 @@ def _iter_decomposed_lockstep(
         selection, obj, np.asarray([obj]), trace.num_solves * cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
         acct.sim_completed, host_seconds=acct.host_seconds,
-        backend_jobs=acct.backend_jobs,
+        backend_jobs=acct.backend_jobs, faults_seen=acct.faults_seen,
     )
 
 
 def _iter_decomposed(
     problem: EsProblem, key: Array, cfg: SolveConfig, backend, priority: int,
     deadline: Optional[float] = None, tag: Optional[int] = None,
-    route: Optional[RouteFn] = None,
+    route: Optional[RouteFn] = None, recovery=None,
 ):
     """Pipelined decomposed backend driver: ALL planned windows in flight.
 
@@ -539,10 +649,14 @@ def _iter_decomposed(
                 windows_submitted += 1
         spec = plan.next_spec()
         fkey = (spec.seq, spec.indices)
-        sub, futures = inflight[fkey]
-        if not all(f.done() for f in futures):
-            yield futures
-        sel, _, _, sub_acct = _reduce_iterations(sub, sub_cfg, futures)
+        sub, rnd = inflight[fkey]
+        if not all(f.done() for f in rnd.futures):
+            yield rnd.futures
+        if recovery is None:
+            sel, _, _, sub_acct = _reduce_iterations(sub, sub_cfg, rnd.futures)
+        else:
+            sel, _, _, sub_acct = yield from _reduce_with_recovery(
+                sub, sub_cfg, rnd, recovery)
         acct.add(sub_acct)
         consumed.add(fkey)
         plan.resolve(sel)
@@ -552,10 +666,10 @@ def _iter_decomposed(
     # request's answer was available without them.  Still-queued orphans are
     # cancelled so they never pollute a later, unrelated drain's
     # packing/accounting; either way the job's buffers are released.
-    for fkey, (_, futures) in inflight.items():
+    for fkey, (_, rnd) in inflight.items():
         if fkey in consumed:
             continue
-        for fut in futures:
+        for fut in rnd.futures:
             if fut.done():
                 receipt = fut.receipt()
                 acct.chip_seconds += receipt.chip_seconds
@@ -581,7 +695,7 @@ def _iter_decomposed(
         selection, obj, np.asarray([obj]), windows_submitted * cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
         acct.sim_completed, host_seconds=acct.host_seconds,
-        backend_jobs=acct.backend_jobs,
+        backend_jobs=acct.backend_jobs, faults_seen=acct.faults_seen,
     )
 
 

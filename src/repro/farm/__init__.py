@@ -35,6 +35,14 @@ package turns the solver into a *farm*:
     plus the paper's 200 us / 25 mW per-execution model drive the
     latency/energy receipts each future carries.
 
+  * :mod:`repro.farm.faults` / :mod:`repro.farm.health` -- fault tolerance
+    for imperfect hardware: a seeded, replayable :class:`FaultPlan` injects
+    drain timeouts, chip failures, stuck lanes and readout bit-flips at the
+    drain boundary; every drained readout is validated host-side against
+    its reported energy (clean / repaired / corrupt); and per-chip circuit
+    breakers quarantine sick chips, steering placement and shrinking
+    ``capacity_hint()`` until a half-open probe re-admits them.
+
 Hardware analogue: a rack of CMOS Ising chips behind a queue.  Packing many
 small problems onto one all-to-all array is exactly how large-scale Ising
 machines (e.g. scalable all-to-all architectures) keep their spin fabric
@@ -42,6 +50,20 @@ busy; the farm reproduces that resource model in simulation while the TPU
 gets dense MXU tiles instead of zero padding.
 """
 
+from repro.farm.faults import (  # noqa: F401
+    ChipFailure,
+    CorruptReadout,
+    DrainTimeout,
+    FarmFault,
+    FaultPlan,
+    ising_energy_np,
+    validate_readout,
+)
+from repro.farm.health import (  # noqa: F401
+    BreakerConfig,
+    ChipBreaker,
+    FarmHealth,
+)
 from repro.farm.packing import (  # noqa: F401
     PackedInstance,
     PackEstimate,

@@ -114,6 +114,14 @@ import numpy as np
 
 from repro.core.formulation import IsingProblem
 from repro.core.hardware import COBI, SolverHardware
+from repro.farm.faults import (
+    ChipFailure,
+    CorruptReadout,
+    DrainTimeout,
+    FaultPlan,
+    validate_readout,
+)
+from repro.farm.health import BreakerConfig, FarmHealth
 from repro.farm.packing import (
     LANE,
     bucket_to,
@@ -200,6 +208,10 @@ class JobReceipt:
     bytes_d2h: int = 0
     sim_completed: float = 0.0  # absolute sim-clock time the job's bin finished
     tag: Optional[int] = None  # caller metadata echoed from submit()
+    # Fault/repair events that touched this job's readout ("repaired:<k>",
+    # "stuck-lane", ...) -- empty for a clean drain.  Terminal failures carry
+    # their receipt on the exception instead (``FarmFault.receipt``).
+    faults: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -226,6 +238,9 @@ class FarmStats:
     chips: List[ChipStats]
     bytes_h2d: int = 0  # host->device traffic of every drain launch
     bytes_d2h: int = 0  # device->host result traffic
+    # Injected/detected fault events by class (empty without a FaultPlan).
+    fault_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    quarantined: Tuple[int, ...] = ()  # chips with an OPEN breaker right now
 
     @property
     def mean_occupancy(self) -> float:
@@ -385,6 +400,9 @@ class CobiFarm:
         bin_full_target: float = 0.9,
         bin_full_min_bins: Optional[int] = None,
         deadline_watermark: float = 0.0,
+        faults: Optional[FaultPlan] = None,
+        health: object = None,
+        validate: Optional[bool] = None,
     ):
         if n_chips < 1:
             raise ValueError(f"need >= 1 chip, got {n_chips}")
@@ -414,6 +432,21 @@ class CobiFarm:
             n_chips if bin_full_min_bins is None else max(1, bin_full_min_bins)
         )
         self.deadline_watermark = deadline_watermark
+        # Fault tolerance: a seeded FaultPlan injects faults at the drain
+        # boundary (kernels untouched); host-side readout validation is on
+        # whenever faults can occur (override with validate=); a breaker
+        # bank quarantines sick chips and steers placement around them.
+        self.faults = faults
+        self._validate = (faults is not None) if validate is None else bool(validate)
+        if isinstance(health, FarmHealth):
+            self.health: Optional[FarmHealth] = health
+        elif isinstance(health, BreakerConfig):
+            self.health = FarmHealth(n_chips, health)
+        elif health or faults is not None:
+            self.health = FarmHealth(n_chips)
+        else:
+            self.health = None
+        self._fault_counts: Dict[str, int] = {}
         self._ids = itertools.count()
         self._pending: List[FarmJob] = []
         self._jobs: Dict[int, FarmJob] = {}
@@ -568,15 +601,33 @@ class CobiFarm:
     def close(self, *, drain: bool = True) -> None:
         """Stop the background drive loop (if any); optionally flush first.
 
-        Safe to call multiple times.  After closing, ``submit`` raises."""
+        Safe to call multiple times.  After closing, ``submit`` raises.
+        No future is ever stranded by a close: if the final drain raises,
+        the affected futures already carry the original error (``_execute``
+        fails them before re-raising), and any job still queued afterwards
+        -- including every queued job under ``drain=False`` -- is failed
+        with :class:`FarmPendingError` so ``result()`` callers get a typed
+        error instead of blocking forever."""
         with self._wakeup:
             self._closed = True
             driver, self._driver = self._driver, None
             self._wakeup.notify_all()
         if driver is not None:
             driver.join(timeout=60.0)
-        if drain:
-            self.drain()
+        try:
+            if drain:
+                self.drain()
+        finally:
+            with self._lock:
+                leftover, self._pending = self._pending, []
+                for job in leftover:
+                    self._errors[job.job_id] = FarmPendingError(
+                        f"farm closed with job {job.job_id} still queued "
+                        f"(close(drain={drain})); nothing will ever run it"
+                    )
+                    future = self._futures.pop(job.job_id, None)
+                    if future is not None:
+                        future._finish()
 
     def __enter__(self) -> "CobiFarm":
         return self
@@ -674,6 +725,9 @@ class CobiFarm:
 
     def stats(self) -> FarmStats:
         with self._lock:
+            quarantined: Tuple[int, ...] = ()
+            if self.health is not None:
+                quarantined = tuple(self.health.quarantined(self._sim_time))
             return FarmStats(
                 jobs_completed=self._completed,
                 super_instances=sum(c.solves for c in self._chips),
@@ -684,7 +738,19 @@ class CobiFarm:
                 chips=list(self._chips),
                 bytes_h2d=self._bytes_h2d,
                 bytes_d2h=self._bytes_d2h,
+                fault_counts=dict(self._fault_counts),
+                quarantined=quarantined,
             )
+
+    def available_chips(self) -> int:
+        """Chips currently taking traffic (breaker-aware; n_chips without
+        health tracking).  Admission's completion estimator consults this
+        so a quarantined chip shrinks BOTH the router's capacity hint and
+        the inflight-ledger view of the same backend."""
+        with self._lock:
+            if self.health is None:
+                return self.n_chips
+            return self.health.available_chips(self._sim_time)
 
     def pending_jobs(self) -> int:
         with self._lock:
@@ -698,9 +764,13 @@ class CobiFarm:
         then charge ``ceil(bins / n_chips)`` chip cycles of
         ``tier_reads * seconds_per_solve`` per (schedule, tier) group --
         conservative (groups are charged sequentially, as drains run them).
+        Quarantined chips are excluded: an open breaker shrinks the hint,
+        steering the router away from a sick farm.
         """
         with self._lock:
             pending = list(self._pending)
+            avail = (self.health.available_chips(self._sim_time)
+                     if self.health is not None else self.n_chips)
         total = 0.0
         groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
         for job in pending:
@@ -716,14 +786,14 @@ class CobiFarm:
                     [jobs[i].ising.n for i in idxs], self.lanes_per_chip
                 )
                 total += (
-                    math.ceil(est.n_bins / self.n_chips)
+                    math.ceil(est.n_bins / avail)
                     * tier_reads
                     * self.hardware.seconds_per_solve
                 )
         return CapacityHint(
             pending_jobs=len(pending),
             est_queue_seconds=total,
-            parallelism=self.n_chips,
+            parallelism=avail,
             kind="sim",
         )
 
@@ -771,6 +841,16 @@ class CobiFarm:
                         # _execute; the drive loop itself must outlive any
                         # single bad drain or every later job wedges silently.
                         traceback.print_exc()
+                    except BaseException:
+                        # A non-Exception (KeyboardInterrupt/SystemExit in a
+                        # hook, MemoryError) kills this thread; _execute
+                        # already failed the drained jobs' futures.  Clear
+                        # the driver slot so a later submit restarts the
+                        # loop instead of queuing into a dead farm.
+                        with self._lock:
+                            if self._driver is threading.current_thread():
+                                self._driver = None
+                        raise
 
     def _due_locked(self, now: float) -> List[FarmJob]:
         """Select (and dequeue) the jobs the drain policy says are due."""
@@ -825,7 +905,9 @@ class CobiFarm:
                             )
                 else:  # deadline
                     bin_seconds = tier_reads * self.hardware.seconds_per_solve
-                    latency = math.ceil(est.n_bins / self.n_chips) * bin_seconds
+                    avail = (self.health.available_chips(self._sim_time)
+                             if self.health is not None else self.n_chips)
+                    latency = math.ceil(est.n_bins / avail) * bin_seconds
                     urgent = any(
                         j.deadline is not None
                         and j.deadline - self._sim_time - latency
@@ -867,22 +949,43 @@ class CobiFarm:
                 tier_jobs = [jobs[i] for i in idxs]
                 try:
                     self._run_group(tier_reads, gkey, tier_jobs)
-                except Exception as exc:  # noqa: BLE001 -- must not strand futures
+                except BaseException as exc:  # noqa: BLE001 -- never strand futures
                     # Fail THIS group's futures (waiters see the original
-                    # error instead of hanging forever) and keep executing
-                    # the other groups; re-raised below so a manual drain's
-                    # caller still sees it, while the drive loop survives.
-                    with self._lock:
-                        for job in tier_jobs:
-                            self._errors[job.job_id] = exc
-                            future = self._futures.pop(job.job_id, None)
-                            if future is not None:
-                                future._finish()
+                    # error instead of hanging forever).  Plain Exceptions
+                    # let the remaining groups execute and are re-raised at
+                    # the end (a manual drain's caller still sees the
+                    # first); a non-Exception (KeyboardInterrupt, ...) also
+                    # fails every not-yet-run group and propagates
+                    # immediately -- a dying drain must not leave ANY of its
+                    # dequeued jobs' result() callers hanging.
+                    self._fail_jobs(tier_jobs, exc)
+                    if not isinstance(exc, Exception):
+                        done = {j.job_id for j in tier_jobs}
+                        self._fail_jobs(
+                            [j for j in pending
+                             if j.job_id not in done and not self._is_done(j.job_id)],
+                            exc,
+                        )
+                        raise
                     if first_exc is None:
                         first_exc = exc
         if first_exc is not None:
             raise first_exc
         return len(pending)
+
+    def _is_done(self, job_id: int) -> bool:
+        with self._lock:
+            return (job_id in self._results or job_id in self._errors
+                    or job_id not in self._futures)
+
+    def _fail_jobs(self, jobs: Sequence[FarmJob], exc: BaseException) -> None:
+        """Store ``exc`` as every job's error and resolve its future."""
+        with self._lock:
+            for job in jobs:
+                self._errors[job.job_id] = exc
+                future = self._futures.pop(job.job_id, None)
+                if future is not None:
+                    future._finish()
 
     def _run_group(
         self, r_tier: int, gkey: Tuple[int, float, float, str], jobs: List[FarmJob]
@@ -938,6 +1041,37 @@ class CobiFarm:
                     draws[pos, :, : slot.n]
                 )
 
+        # Placement is snapshotted BEFORE the launch (breaker states only
+        # move at commit time, and drains serialize on the execution lock,
+        # so the snapshot stays valid): healthy chips take the drain's head
+        # round-robin, half-open chips get one probe bin each from the
+        # tail, open chips get nothing.
+        with self._lock:
+            cycle0 = self._cycle
+            if self.health is not None:
+                chip_of = self.health.schedule(b_real, self._sim_time)
+            else:
+                chip_of = [b % self.n_chips for b in range(b_real)]
+        bin_cycle, _ = _chip_cycles(chip_of)
+
+        plan = self.faults
+        if plan is not None and plan.drain_timeout(sorted(by_id)):
+            # The whole drain "hung": chips ran and time passed, but every
+            # readout was lost.  Bill the hardware, fail every future with
+            # a typed DrainTimeout (retryable -- a resubmit draws fresh job
+            # ids), and skip the actual kernel launch.  No breaker events:
+            # a hung drain is an infrastructure fault, not attributable to
+            # any one chip.
+            exc = DrainTimeout(
+                f"injected drain timeout: {len(slots)} job(s) in "
+                f"{b_real} bin(s) lost their readout"
+            )
+            with self._lock:
+                self._bill_chips(bins, chip_of, bin_cycle, r_tier)
+                self._count_fault("drain_timeout", len(slots))
+            self._fail_jobs(jobs, exc)
+            return
+
         if reduce == "best":
             results, h2d, d2h = self._execute_fused(
                 bins, slots, by_id, hp, jp, phi0,
@@ -946,18 +1080,154 @@ class CobiFarm:
             results, h2d, d2h = self._execute_full(
                 bins, slots, by_id, hp, jp, phi0,
                 steps=steps, dt=dt, ks_max=ks_max)
+
+        # Fault injection + host-side validation, still outside the state
+        # lock (pure numpy on this group's local results).
+        faults_by_job: Dict[int, Tuple[str, ...]] = {}
+        failed: Dict[int, BaseException] = {}
+        chip_outcome: Dict[int, str] = {}
+        if plan is not None:
+            self._inject_faults(plan, bins, slots, by_id, chip_of, bin_cycle,
+                                cycle0, results, faults_by_job, failed,
+                                chip_outcome)
+        if self._validate:
+            self._validate_results(bins, slots, by_id, chip_of, results,
+                                   faults_by_job, failed, chip_outcome)
+
         with self._lock:
             self._bytes_h2d += h2d
             self._bytes_d2h += d2h
-            self._results.update(results)
-            self._completed += len(results)
-            self._account(bins, slots, by_id, r_tier, h2d, d2h)
-            # Results AND receipts are stored: resolve the futures (fires
-            # done-callbacks from this -- possibly background -- thread).
+            ok = {jid: r for jid, r in results.items() if jid not in failed}
+            self._results.update(ok)
+            self._completed += len(ok)
+            self._account(bins, slots, by_id, r_tier, h2d, d2h,
+                          chip_of=chip_of, faults=faults_by_job)
+            for jid, exc in failed.items():
+                # The chip time WAS spent: the receipt rides the exception
+                # (partial accounting for the recovery layer) instead of
+                # the receipts table.
+                exc.receipt = self._receipts.pop(jid, None)
+                self._errors[jid] = exc
+            for kind, jids in _group_fault_kinds(faults_by_job, failed).items():
+                self._count_fault(kind, len(jids))
+            if self.health is not None:
+                for chip, outcome in sorted(chip_outcome.items()):
+                    self.health.record(chip, outcome, self._sim_time)
+            # Results AND receipts (or errors) are stored: resolve the
+            # futures (fires done-callbacks from this -- possibly
+            # background -- thread).
             for _, _, slot in slots:
                 future = self._futures.pop(slot.job_id, None)
                 if future is not None:
                     future._finish()
+
+    def _count_fault(self, kind: str, n: int = 1) -> None:
+        if n:
+            self._fault_counts[kind] = self._fault_counts.get(kind, 0) + n
+
+    def _inject_faults(self, plan, bins, slots, by_id, chip_of, bin_cycle,
+                       cycle0, results, faults_by_job, failed, chip_outcome):
+        """Apply chip failures, stuck lanes and readout corruption to the
+        group's local ``results`` (copies only; kernel outputs committed for
+        other jobs are never touched)."""
+        # Chip failures: every slot of a bin on a failed chip loses its
+        # readout.  Keyed on (chip, global cycle), so transients are
+        # replayable and a retry on the same chip in a later cycle draws
+        # fresh.
+        failed_bins = set()
+        for b in range(len(bins)):
+            chip = chip_of[b]
+            if plan.chip_failed(chip, cycle0 + bin_cycle[b]):
+                failed_bins.add(b)
+                chip_outcome[chip] = "failed"
+            else:
+                chip_outcome.setdefault(chip, "ok")
+        for b, _, slot in slots:
+            if b in failed_bins:
+                results.pop(slot.job_id, None)
+                failed[slot.job_id] = ChipFailure(
+                    f"chip {chip_of[b]} failed during cycle "
+                    f"{cycle0 + bin_cycle[b]}; job {slot.job_id} readout lost",
+                    job_id=slot.job_id, chip_id=chip_of[b],
+                )
+        # Stuck lanes: persistent per-(chip, lane) spins forced to a value
+        # in the readout copy; validation downstream repairs (one stuck
+        # lane in a slot) or condemns (several) the affected jobs.
+        stuck_by_chip = {c: plan.stuck_lanes(c, self.lanes_per_chip)
+                         for c in set(chip_of)}
+        for b, _, slot in slots:
+            if b in failed_bins or slot.job_id not in results:
+                continue
+            stuck = [la for la in stuck_by_chip.get(chip_of[b], ())
+                     if slot.offset <= la < slot.offset + slot.n]
+            if not stuck:
+                continue
+            res = results[slot.job_id]
+            spins = np.array(res.spins, copy=True)
+            for la in stuck:
+                spins[..., la - slot.offset] = plan.stuck_value
+            results[slot.job_id] = SolverResult(spins=spins, energies=res.energies)
+            faults_by_job[slot.job_id] = faults_by_job.get(slot.job_id, ()) + (
+                "stuck-lane",)
+        # Per-job readout corruption (bit flips / energy scrambles).
+        for b, _, slot in slots:
+            if slot.job_id not in results:
+                continue
+            res = results[slot.job_id]
+            spins, energies, kind = plan.corrupt_readout(
+                slot.job_id, res.spins, res.energies)
+            if kind != "none":
+                results[slot.job_id] = SolverResult(spins=spins, energies=energies)
+
+    def _validate_results(self, bins, slots, by_id, chip_of, results,
+                          faults_by_job, failed, chip_outcome):
+        """Host-side detection: recompute each surviving readout's energy
+        and classify clean / repaired / corrupt (see farm.faults)."""
+        outcome_rank = {"ok": 0, "degraded": 1, "failed": 2}
+        for b, _, slot in slots:
+            res = results.get(slot.job_id)
+            if res is None:
+                continue
+            job = by_id[slot.job_id]
+            verdict = validate_readout(
+                res.spins, res.energies,
+                np.asarray(job.ising.h), np.asarray(job.ising.j))
+            chip = chip_of[b]
+            if verdict.status == "clean":
+                chip_outcome.setdefault(chip, "ok")
+                continue
+            if verdict.status == "repaired":
+                results[slot.job_id] = SolverResult(
+                    spins=verdict.spins.astype(res.spins.dtype),
+                    energies=res.energies,
+                )
+                faults_by_job[slot.job_id] = faults_by_job.get(
+                    slot.job_id, ()) + (f"repaired:{verdict.repaired_reads}",)
+                if outcome_rank[chip_outcome.get(chip, "ok")] < 1:
+                    chip_outcome[chip] = "degraded"
+                continue
+            # corrupt: never committed as a result.
+            results.pop(slot.job_id, None)
+            failed[slot.job_id] = CorruptReadout(
+                f"job {slot.job_id} readout failed validation on chip "
+                f"{chip}: {verdict.detail}",
+                job_id=slot.job_id, chip_id=chip,
+            )
+            chip_outcome[chip] = "failed"
+
+    def _bill_chips(self, bins, chip_of, bin_cycle, r_tier: int) -> None:
+        """Advance chip busy-time and the sim clock for a drain whose
+        readouts were lost (drain timeout): the hardware ran, the caller
+        gets nothing.  Caller holds the state lock."""
+        bin_seconds = r_tier * self.hardware.seconds_per_solve
+        cycles = (max(bin_cycle) + 1) if bin_cycle else 0
+        for b, inst in enumerate(bins):
+            chip = self._chips[chip_of[b]]
+            chip.solves += 1
+            chip.busy_seconds += bin_seconds
+            chip.lanes_capacity += inst.capacity
+        self._sim_time += cycles * bin_seconds
+        self._cycle += cycles
 
     def _execute_fused(self, bins, slots, by_id, hp, jp, phi0, *, steps, dt, ks_max):
         """Fused drain: ONE launch; per-job winners come back, nothing else.
@@ -1045,20 +1315,26 @@ class CobiFarm:
             )
         return results, h2d, d2h
 
-    def _account(self, bins, slots, by_id, r_tier: int, h2d: int, d2h: int):
-        """Simulated hardware accounting: bins round-robin over chips, each
-        occupying its chip for the tier's sequential executions.  The launch
-        group's host<->device bytes are attributed per job by lane share."""
+    def _account(self, bins, slots, by_id, r_tier: int, h2d: int, d2h: int,
+                 *, chip_of: Optional[List[int]] = None,
+                 faults: Optional[Dict[int, Tuple[str, ...]]] = None):
+        """Simulated hardware accounting: bins occupy their assigned chip
+        (round-robin when no placement was computed; health-aware otherwise)
+        for the tier's sequential executions.  The launch group's
+        host<->device bytes are attributed per job by lane share."""
         hw = self.hardware
         bin_seconds = r_tier * hw.seconds_per_solve
         b_real = len(bins)
-        cycles = math.ceil(b_real / self.n_chips)
+        if chip_of is None:
+            chip_of = [b % self.n_chips for b in range(b_real)]
+        faults = faults or {}
+        bin_cycle, cycles = _chip_cycles(chip_of)
         t0 = self._sim_time
+        cycle0 = self._cycle
         bin_completion = {}
         for b, inst in enumerate(bins):
-            chip = self._chips[b % self.n_chips]
-            cycle_in_drain = b // self.n_chips
-            bin_completion[b] = t0 + (cycle_in_drain + 1) * bin_seconds
+            chip = self._chips[chip_of[b]]
+            bin_completion[b] = t0 + (bin_cycle[b] + 1) * bin_seconds
             chip.solves += 1
             chip.busy_seconds += bin_seconds
             chip.jobs += len(inst.slots)
@@ -1076,8 +1352,8 @@ class CobiFarm:
             share = slot.n / inst.lanes_used
             self._receipts[job.job_id] = JobReceipt(
                 job_id=job.job_id,
-                chip_id=b % self.n_chips,
-                cycle=self._cycle - cycles + b // self.n_chips,
+                chip_id=chip_of[b],
+                cycle=cycle0 + bin_cycle[b],
                 lanes=slot.n,
                 bin_occupancy=inst.occupancy,
                 sim_latency_seconds=bin_completion[b] - job.submit_sim_time,
@@ -1087,7 +1363,37 @@ class CobiFarm:
                 bytes_d2h=job_d2h[k],
                 sim_completed=bin_completion[b],
                 tag=job.tag,
+                faults=faults.get(job.job_id, ()),
             )
+
+
+def _chip_cycles(chip_of: Sequence[int]) -> Tuple[List[int], int]:
+    """Per-bin serialized position on its chip, plus the drain's total
+    cycle count (the busiest chip's bin count)."""
+    pos: Dict[int, int] = {}
+    bin_cycle: List[int] = []
+    for chip in chip_of:
+        k = pos.get(chip, 0)
+        bin_cycle.append(k)
+        pos[chip] = k + 1
+    return bin_cycle, (max(pos.values()) if pos else 0)
+
+
+def _group_fault_kinds(faults_by_job: Dict[int, Tuple[str, ...]],
+                       failed: Dict[int, BaseException]) -> Dict[str, List[int]]:
+    """Fold per-job fault tags + terminal failures into counter buckets."""
+    kinds: Dict[str, List[int]] = {}
+    for jid, tags in faults_by_job.items():
+        for tag in tags:
+            kinds.setdefault(tag.split(":", 1)[0], []).append(jid)
+    for jid, exc in failed.items():
+        if isinstance(exc, ChipFailure):
+            kinds.setdefault("chip_failure", []).append(jid)
+        elif isinstance(exc, CorruptReadout):
+            kinds.setdefault("corrupt", []).append(jid)
+        else:
+            kinds.setdefault("fault", []).append(jid)
+    return kinds
 
 
 def _attribute_bytes(total: int, weights: Sequence[int]) -> List[int]:

@@ -20,6 +20,11 @@ from repro.serving.engine import (  # noqa: F401
     SummarizeRequest,
     SummarizeResponse,
 )
+from repro.serving.recovery import (  # noqa: F401
+    RecoveryContext,
+    RequestFailed,
+    RetryPolicy,
+)
 from repro.serving.router import (  # noqa: F401
     BackendRouter,
     InfeasibleRoute,

@@ -59,7 +59,7 @@ import dataclasses
 import math
 import threading
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.farm.packing import estimate_packing, replica_tiers
 
@@ -180,10 +180,15 @@ class AdmissionController:
         replica_bucket: int = 8,
         tier_ratio: float = 2.0,
         router=None,
+        chips_available: Optional[Callable[[], int]] = None,
     ):
         self.config = config or AdmissionConfig()
         self.lanes_per_chip = lanes_per_chip
         self.n_chips = max(1, n_chips)
+        # Live health-aware chip count (e.g. CobiFarm.available_chips):
+        # quarantined chips shrink the feasibility estimate's parallelism so
+        # a degraded farm admits less, not the same.
+        self.chips_available = chips_available
         self.seconds_per_solve = seconds_per_solve
         self.replica_bucket = replica_bucket
         self.tier_ratio = tier_ratio
@@ -444,6 +449,12 @@ class AdmissionController:
         than this bound.  (Decomposed requests submit window waves that can
         fragment further; ``deadline_watermark`` is the margin for that.)
         """
+        chips = self.n_chips
+        if self.chips_available is not None:
+            try:
+                chips = max(1, min(int(self.chips_available()), self.n_chips))
+            except Exception:
+                chips = self.n_chips
         per_request = [list(rec.jobs) for rec in self._inflight.values()]
         per_request.append([(int(n), reads) for n in job_lanes])
         total = 0.0
@@ -457,6 +468,6 @@ class AdmissionController:
             for tier_reads, idxs in tiers:
                 est = estimate_packing([sizes[i] for i in idxs],
                                        self.lanes_per_chip)
-                cycles = math.ceil(est.n_bins / self.n_chips)
+                cycles = math.ceil(est.n_bins / chips)
                 total += cycles * tier_reads * self.seconds_per_solve
         return sim_now + total

@@ -83,6 +83,7 @@ from repro.serving.admission import (
     EngineOverloadedError,
 )
 from repro.serving.calibration import CalibrationProfile, default_profile
+from repro.serving.recovery import RecoveryContext, RetryPolicy
 from repro.serving.router import BackendRouter, RouterConfig
 from repro.solvers.base import AwaitableFuture, ThreadPoolBackend
 from repro.solvers.cobi import COBI_MAX_SPINS
@@ -143,6 +144,13 @@ class SummarizeResponse:
     backend_used: Optional[str] = None
     predicted_seconds: float = 0.0
     realized_seconds: float = 0.0
+    # Fault-tolerant serving: recovery attempts burned by this request's
+    # jobs, fault events seen (terminal faults retried/failed over PLUS
+    # readout corruption absorbed by validation repair), and whether any job
+    # finished on the failover backend.  All zero on a fault-free run.
+    retries: int = 0
+    faults_seen: int = 0
+    failed_over: bool = False
 
 
 class ResponseFuture(AwaitableFuture):
@@ -209,6 +217,9 @@ class SummarizationEngine:
         route_objective: str = "min-energy",
         profile=None,
         quality_floor: Optional[float] = None,
+        faults=None,
+        health=None,
+        retry: Optional[RetryPolicy] = None,
         seed: int = 0,
     ):
         """``backend`` injects any :class:`repro.solvers.base.SolverBackend`.
@@ -229,16 +240,33 @@ class SummarizationEngine:
         ``seed`` keys the continuous ``submit()`` path: request ``r``'s key
         is ``fold_in(key(seed), r)``, so a ``run_batch`` with the same seed
         and the same engine-assigned ids is bit-identical -- routing never
-        changes results, only where (and at what cost) they are computed."""
+        changes results, only where (and at what cost) they are computed.
+
+        Fault-tolerant serving: ``faults`` (a
+        :class:`repro.farm.faults.FaultPlan`) and ``health`` (breaker config)
+        are forwarded to the default farm; ``retry`` (a
+        :class:`repro.serving.recovery.RetryPolicy`) turns typed farm faults
+        into per-job deadline-budgeted retries, failover onto the router's
+        pool, and -- when both run out -- a typed
+        :class:`~repro.serving.recovery.RequestFailed` on the response
+        future.  Without ``retry`` the first fault fails the request (still
+        typed; futures are never stranded)."""
         self.cfg = solve_cfg or SolveConfig(
             solver="cobi", iterations=6, reads=8, int_range=14
         )
         self.encoder = encoder or HashedBowEncoder()
         self.lam = lam
         self.score = score_against_exact
+        self.retry = retry
+        if farm is not None and (faults is not None or health is not None):
+            raise ValueError(
+                "pass faults=/health= only with the default farm; a pre-"
+                "built farm= carries its own fault plan and health tracker"
+            )
         if farm is None and backend is None and n_chips > 0 \
                 and self.cfg.solver == "cobi":
-            farm = CobiFarm(n_chips, policy=policy)
+            farm = CobiFarm(n_chips, policy=policy, faults=faults,
+                            health=health)
         self.farm = farm
         if backend is not None:
             self.backend = backend
@@ -285,6 +313,9 @@ class SummarizationEngine:
                 getattr(self.backend, "hardware", None), "seconds_per_solve", 0.0
             ),
             router=self.router,
+            # Health-shrunk capacity flows into the ledger-side completion
+            # estimate too, not just the router's live capacity_hint.
+            chips_available=getattr(self.backend, "available_chips", None),
         )
         self._seed = seed
         self._base_key = jax.random.key(seed)
@@ -330,7 +361,20 @@ class SummarizationEngine:
         requests' subproblems share the backend's packed rounds, exactly like
         the legacy lockstep loop (bit-identical for the same seed and ids).
         """
-        return [f.result() for f in self._enqueue_batch(requests, seed)]
+        return [f.result() for f in self.submit_batch(requests, seed)]
+
+    def submit_batch(self, requests: Sequence[SummarizeRequest], seed: int = 0
+                     ) -> List[ResponseFuture]:
+        """Enqueue a batch atomically; returns one future per request.
+
+        The batch face of :meth:`submit`: every request is admitted BEFORE
+        the driver adopts any of them, so admission/routing decisions are a
+        pure function of the request mix (no race against in-flight drains)
+        and the whole batch's jobs pack into shared first-round drains.
+        Unlike :meth:`run_batch` the caller collects results -- a failed
+        request surfaces on ITS future instead of aborting the batch.
+        """
+        return self._enqueue_batch(requests, seed)
 
     def stream(self, requests: Iterable[SummarizeRequest], seed: int = 0):
         """Serve requests, yielding responses in COMPLETION order.
@@ -623,6 +667,7 @@ class SummarizationEngine:
         backend_used = None
         realized_seconds = 0.0
         eff_deadline = req.deadline
+        recovery = None
         if self.backend is not None:
             backend = self.backend
             route_hook = None
@@ -638,11 +683,13 @@ class SummarizationEngine:
                                     + (req.deadline - work.sim_at_admit))
                 if cfg.decompose:
                     route_hook = self._window_route(work, cfg)
+            recovery = self._recovery_for(backend, eff_deadline, cfg,
+                                          req.request_id)
             t_serve0 = backend.sim_now()
             report = yield from iter_solve_es(
                 problem, work.key, cfg, backend=backend,
                 priority=req.priority, deadline=eff_deadline,
-                tag=req.request_id, route=route_hook,
+                tag=req.request_id, route=route_hook, recovery=recovery,
             )
             if self.router is not None:
                 if report.backend_jobs:  # window-routed: dominant backend
@@ -702,6 +749,43 @@ class SummarizationEngine:
             backend_used=backend_used,
             predicted_seconds=work.predicted_seconds,
             realized_seconds=realized_seconds,
+            retries=recovery.retries if recovery is not None else 0,
+            faults_seen=report.faults_seen + (
+                recovery.faults_seen if recovery is not None else 0),
+            failed_over=bool(recovery.failed_over) if recovery is not None
+            else False,
+        )
+
+    def _recovery_for(self, backend, eff_deadline: Optional[float],
+                      cfg: SolveConfig, request_id: int
+                      ) -> Optional[RecoveryContext]:
+        """Per-request recovery context (None when no retry policy is set).
+
+        The failover target is the router's OTHER backend (the existing
+        spill path); without a router there is nowhere to fail over and the
+        context retries-then-fails-typed."""
+        if self.retry is None:
+            return None
+        failover_be, failover_name = None, None
+        if self.router is not None:
+            for name, be in self.router.backends.items():
+                if be is not backend:
+                    failover_be, failover_name = be, name
+                    break
+        on_failover = None
+        if failover_name is not None:
+            router, fname = self.router, failover_name
+            on_failover = lambda: router.note_failover(fname)  # noqa: E731
+        hw = self._hardware()
+        return RecoveryContext(
+            self.retry,
+            clock=backend.sim_now,
+            deadline=eff_deadline,
+            failover=failover_be,
+            failover_name=failover_name,
+            on_failover=on_failover,
+            est_job_seconds=cfg.reads * hw.seconds_per_solve,
+            request_id=request_id,
         )
 
     def _window_route(self, work: _Work, cfg: SolveConfig):

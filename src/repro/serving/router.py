@@ -116,6 +116,7 @@ class BackendRouter:
         self.primary = primary
         self._decisions: Dict[str, int] = {n: 0 for n in self.backends}
         self._spills = 0
+        self._failovers = 0
 
     # --------------------------------------------------------------- route
 
@@ -223,11 +224,20 @@ class BackendRouter:
                 realized_energy=realized_energy,
             )
 
+    def note_failover(self, name: str) -> None:
+        """Record a recovery failover onto ``name`` (a job moved there after
+        its retry budget ran out -- distinct from an admission-time spill)."""
+        with self._lock:
+            if name in self._decisions:
+                self._decisions[name] += 1
+            self._failovers += 1
+
     def stats(self) -> dict:
         with self._lock:
             return {
                 "decisions": dict(self._decisions),
                 "spills": self._spills,
+                "failovers": self._failovers,
             }
 
     # ------------------------------------------------------------ internal
@@ -242,10 +252,20 @@ class BackendRouter:
 
     def _queue_seconds(self, name: str, model: BackendCostModel,
                        queued: Optional[Dict[str, float]]) -> float:
-        if queued is not None:
-            return max(queued.get(name, 0.0), 0.0)
         backend = self.backends[name]
         hint = getattr(backend, "capacity_hint", None)
-        if hint is None:
-            return 0.0
-        return max(hint().est_queue_seconds, 0.0)
+        live = 0.0
+        if hint is not None:
+            try:
+                live = max(hint().est_queue_seconds, 0.0)
+            except Exception:
+                live = 0.0
+        if queued is None:
+            return live
+        # Reconcile the two views of load: the admission ledger knows about
+        # admitted-but-not-yet-submitted work, the scheduler's capacity hint
+        # knows about queued jobs AND health-quarantined chips shrinking the
+        # effective parallelism.  Taking the max means a burst can never
+        # over-admit past what the scheduler itself says is queued, and a
+        # degraded farm looks as slow to admission as it does to itself.
+        return max(max(queued.get(name, 0.0), 0.0), live)

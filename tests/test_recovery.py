@@ -1,0 +1,299 @@
+"""Deadline-budgeted retry, pool failover, and typed request failure.
+
+The load-bearing invariants:
+
+* Recovery never changes results: a retried or failed-over job resubmits
+  the SAME instance under the SAME key, so a chaos run that recovers is
+  BIT-IDENTICAL to the fault-free run (selection and objective).
+* Recovery never strands state: terminal failures release/cancel every
+  sibling job future and admission's inflight ledger drains to zero.
+* Eviction only targets QUEUED requests -- an active request (possibly
+  mid-retry or already failed over) can never be evicted.
+* Capacity reconciliation: the router's queue estimate and admission's
+  completion estimate both shrink with the farm's health-aware chip count,
+  and the router never trusts the admission ledger below the scheduler's
+  own live hint.
+"""
+
+import threading
+import time
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SolveConfig
+from repro.core.pipeline import iter_solve_es
+from repro.data.synthetic import synthetic_document
+from repro.embeddings import problem_from_sentences
+from repro.farm import CobiFarm, FaultPlan
+from repro.serving import (
+    AdmissionConfig,
+    AdmissionController,
+    BackendRouter,
+    RecoveryContext,
+    RequestEvicted,
+    RequestFailed,
+    RetryPolicy,
+    SummarizationEngine,
+    SummarizeRequest,
+    default_profile,
+)
+from repro.data.text import split_sentences
+
+CFG = SolveConfig(solver="cobi", iterations=2, reads=6, int_range=14,
+                  steps=100, p=20, q=10)
+DOCS = [" ".join(synthetic_document(500 + i, n)) for i, n in
+        enumerate([14, 18])]
+
+
+def _reqs():
+    return [SummarizeRequest(text=d, m=5, request_id=i + 1)
+            for i, d in enumerate(DOCS)]
+
+
+@pytest.fixture(scope="module")
+def fault_free():
+    eng = SummarizationEngine(CFG, n_chips=2)
+    out = eng.run_batch(_reqs(), seed=0)
+    eng.close()
+    return out
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(a.selection, b.selection)
+    assert a.objective == b.objective
+
+
+# ------------------------------------------------------ decision machine
+
+
+def test_retry_policy_margin_monotone_and_capped():
+    pol = RetryPolicy(backoff_base=0.001, backoff_factor=2.0,
+                      backoff_cap=0.003)
+    ms = [pol.margin(a) for a in range(5)]
+    assert ms == sorted(ms)
+    assert ms[0] == 0.001 and ms[-1] == 0.003
+
+
+def test_recovery_decide_retry_then_failover_then_typed():
+    pol = RetryPolicy(max_retries=2)
+    hits = []
+    ctx = RecoveryContext(pol, clock=lambda: 0.0, failover="POOL",
+                          failover_name="pool",
+                          on_failover=lambda: hits.append(1), request_id=7)
+    assert ctx.decide(0) is None          # retry 1
+    assert ctx.decide(1) is None          # retry 2
+    assert ctx.decide(2) == "POOL"        # budget burned -> failover
+    assert ctx.retries == 2 and ctx.failed_over == 1 and hits == [1]
+    # A fault ON the failover backend is terminal, never a loop.
+    with pytest.raises(RequestFailed) as ei:
+        ctx.decide(0, failed_over=True)
+    assert ei.value.request_id == 7
+
+
+def test_recovery_budget_gates_on_deadline_slack():
+    pol = RetryPolicy(max_retries=5, failover=False,
+                      backoff_base=0.01, backoff_cap=0.01)
+    roomy = RecoveryContext(pol, clock=lambda: 0.0, deadline=1.0,
+                            est_job_seconds=0.1)
+    assert roomy.decide(0) is None
+    tight = RecoveryContext(pol, clock=lambda: 0.95, deadline=1.0,
+                            est_job_seconds=0.1)
+    with pytest.raises(RequestFailed):  # slack 0.05 < margin + job estimate
+        tight.decide(0)
+    assert tight.retries == 0
+
+
+def test_request_failed_carries_partial_receipts():
+    pol = RetryPolicy(max_retries=0, failover=False)
+    ctx = RecoveryContext(pol, clock=lambda: 0.0, request_id=3)
+    exc = RuntimeError("boom")
+    exc.receipt = "RECEIPT"
+    ctx.note_fault(exc)
+    with pytest.raises(RequestFailed) as ei:
+        ctx.decide(0, cause=exc)
+    assert ei.value.receipts == ("RECEIPT",)
+    assert ei.value.faults == {"RuntimeError": 1}
+    assert ei.value.cause is exc
+
+
+# ------------------------------------------------------ engine-level runs
+
+
+def test_retry_recovers_bit_identical(fault_free):
+    eng = SummarizationEngine(CFG, n_chips=2,
+                              faults=FaultPlan(seed=3, corrupt_rate=0.35),
+                              retry=RetryPolicy(max_retries=6))
+    got = eng.run_batch(_reqs(), seed=0)
+    eng.close()
+    for ref, r in zip(fault_free, got):
+        _assert_same(ref, r)
+        assert not r.failed_over
+    assert any(r.retries > 0 for r in got)
+    assert any(r.faults_seen > 0 for r in got)
+
+
+def test_repaired_bitflips_count_as_faults_seen_without_retries(fault_free):
+    eng = SummarizationEngine(CFG, n_chips=2,
+                              faults=FaultPlan(seed=7, bitflip_rate=0.5),
+                              retry=RetryPolicy())
+    got = eng.run_batch(_reqs(), seed=0)
+    eng.close()
+    for ref, r in zip(fault_free, got):
+        _assert_same(ref, r)
+    # In-farm repairs surface in the fault count but burn no retry budget.
+    assert sum(r.faults_seen for r in got) > 0
+
+
+def test_failover_to_pool_bit_identical(fault_free):
+    prof = default_profile(n_chips=2, pool_workers=2)
+    eng = SummarizationEngine(CFG, n_chips=2, routing=True, profile=prof,
+                              pool_workers=2,
+                              faults=FaultPlan(seed=5, corrupt_rate=1.0),
+                              retry=RetryPolicy(max_retries=1))
+    got = eng.run_batch(_reqs(), seed=0)
+    rstats = eng.router.stats()
+    eng.close()
+    for ref, r in zip(fault_free, got):
+        _assert_same(ref, r)
+        assert r.failed_over
+    assert rstats["failovers"] > 0
+
+
+def test_exhausted_budget_fails_typed_and_releases_admission():
+    eng = SummarizationEngine(CFG, n_chips=2,
+                              faults=FaultPlan(seed=5, corrupt_rate=1.0),
+                              retry=RetryPolicy(max_retries=1,
+                                                failover=False))
+    futs = [eng.submit(d, m=5) for d in DOCS]
+    for fut in futs:
+        with pytest.raises(RequestFailed) as ei:
+            fut.result(timeout=120.0)
+        assert ei.value.attempts >= 1
+        assert "CorruptReadout" in ei.value.faults
+        assert len(ei.value.receipts) >= 1  # partial work was billed
+    assert eng.admission.depth() == 0  # ledger fully released
+    eng.close()
+
+
+def test_fault_fields_zero_on_clean_run(fault_free):
+    for r in fault_free:
+        assert r.retries == 0
+        assert r.faults_seen == 0
+        assert not r.failed_over
+
+
+def test_cancel_mid_retry_returns_false_and_request_completes(fault_free):
+    """cancel() races the driver: once the driver owns a (retrying) request
+    it is uncancellable, and the retry loop still converges bit-identical."""
+    eng = SummarizationEngine(CFG, n_chips=2,
+                              faults=FaultPlan(seed=3, corrupt_rate=0.35),
+                              retry=RetryPolicy(max_retries=6))
+    fut = eng.submit(DOCS[0], m=5)
+    deadline = time.monotonic() + 60.0
+    while time.monotonic() < deadline:  # wait for the driver to adopt it
+        with eng._lock:
+            if not any(w.future is fut for w in eng._queue):
+                break
+        time.sleep(0.001)
+    assert fut.cancel() is False
+    got = fut.result(timeout=120.0)
+    eng.close()
+    _assert_same(fault_free[0], got)
+
+
+# ---------------------------------------------------- no stranded futures
+
+
+def test_terminal_failure_releases_all_sibling_futures():
+    """When one job's recovery budget dies, every sibling future of the
+    request is cancelled/released -- the farm keeps no orphaned state."""
+    farm = CobiFarm(n_chips=2, faults=FaultPlan(seed=5, corrupt_rate=1.0))
+    sents = split_sentences(DOCS[0])
+    problem = problem_from_sentences(sents, 5)
+    ctx = RecoveryContext(RetryPolicy(max_retries=0, failover=False),
+                          clock=farm.sim_now, request_id=1)
+    gen = iter_solve_es(problem, jax.random.key(0), CFG, backend=farm,
+                        recovery=ctx)
+    with pytest.raises(RequestFailed):
+        next(gen)
+        while True:
+            farm.drain()
+            next(gen)
+    assert farm.pending_jobs() == 0
+    assert farm._errors == {} and farm._results == {} and farm._receipts == {}
+    farm.close()
+
+
+def test_eviction_never_touches_active_requests():
+    """_evict_for only scans the QUEUE: a request the driver already owns
+    (it may be mid-retry or failed over) is never evicted."""
+    eng = SummarizationEngine(CFG, n_chips=2,
+                              admission=AdmissionConfig(
+                                  max_queue_depth=4, shed="evict-lowest",
+                                  deadline_feasibility=False))
+    key = jax.random.key(0)
+    # "Active": admitted but NOT in the queue -- exactly the driver-owned
+    # state (bypassing _enqueue_works keeps the scenario deterministic).
+    active = eng._admit_work(
+        SummarizeRequest(text=DOCS[0], m=5, request_id=101, priority=0), key)
+    queued = eng._admit_work(
+        SummarizeRequest(text=DOCS[1], m=5, request_id=102, priority=0), key)
+    with eng._new:
+        eng._queue.append(queued)
+    assert eng._evict_for(priority=1, deadline=None) is True  # takes queued
+    with pytest.raises(RequestEvicted):
+        queued.future.result(timeout=5.0)
+    # Only the active request remains -- it ranks lower but is untouchable.
+    assert eng._evict_for(priority=1, deadline=None) is False
+    assert eng.admission.is_active(101)
+    assert not active.future.done()
+    eng.admission.on_done(101)
+    eng.close()
+
+
+# ------------------------------------------------ capacity reconciliation
+
+
+def test_router_queue_estimate_never_below_live_hint():
+    prof = default_profile(n_chips=2, pool_workers=2)
+    farm_be = SimpleNamespace(
+        capacity_hint=lambda: SimpleNamespace(est_queue_seconds=0.5))
+    router = BackendRouter({"farm": farm_be, "pool": object()}, prof)
+    model = prof.model("farm")
+    # Ledger below the scheduler's own view -> the live hint wins.
+    assert router._queue_seconds("farm", model, {"farm": 0.2}) == 0.5
+    # Ledger above (admitted-but-unsubmitted work) -> the ledger wins.
+    assert router._queue_seconds("farm", model, {"farm": 0.9}) == 0.9
+    # Backends with no hint (plain pools) fall back to the ledger alone.
+    assert router._queue_seconds("pool", prof.model("pool"), {}) == 0.0
+    assert router._queue_seconds("farm", model, None) == 0.5
+
+
+def test_admission_estimate_shrinks_with_available_chips():
+    kw = dict(lanes_per_chip=128, n_chips=4, seconds_per_solve=2e-4)
+    healthy = AdmissionController(AdmissionConfig(), **kw,
+                                  chips_available=lambda: 4)
+    degraded = AdmissionController(AdmissionConfig(), **kw,
+                                   chips_available=lambda: 1)
+    lanes = [59] * 8  # 4 bins' worth of jobs
+    est4 = healthy._estimate_completion_locked(lanes, 8, 0.0)
+    est1 = degraded._estimate_completion_locked(lanes, 8, 0.0)
+    assert est1 > est4  # fewer chips -> later completion -> earlier shedding
+    # A lying callable can never GROW capacity past the configured farm.
+    inflated = AdmissionController(AdmissionConfig(), **kw,
+                                   chips_available=lambda: 64)
+    assert inflated._estimate_completion_locked(lanes, 8, 0.0) == est4
+
+
+def test_quarantine_flows_into_admission_feasibility():
+    """End to end: a farm with a dead chip reports shrunken capacity through
+    available_chips(), which the engine wires into admission."""
+    eng = SummarizationEngine(CFG, n_chips=2,
+                              faults=FaultPlan(seed=2, failed_chips=(1,)),
+                              retry=RetryPolicy(max_retries=8))
+    assert eng.admission.chips_available == eng.farm.available_chips
+    assert eng.admission.chips_available() == 2  # nothing tripped yet
+    eng.close()
