@@ -33,7 +33,8 @@ import sys
 
 # Metrics gated per scenario (when the baseline scenario carries them).
 TRACKED = ("rps", "occupancy", "bytes_per_req", "p50_ms", "p95_ms",
-           "rps_vs_lockstep", "joules_per_req")
+           "rps_vs_lockstep", "joules_per_req", "overlap_fraction",
+           "encoder_joules_per_req")
 
 # Invariant metrics that must be EXACTLY zero whenever the baseline scenario
 # reports them: a single stranded future or corrupt-readout escape is a

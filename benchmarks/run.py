@@ -13,6 +13,7 @@ def main() -> None:
 
     from benchmarks import (
         chaos_soak,
+        encoder_serving,
         farm_throughput,
         fig1_formulation,
         fig23_iterations,
@@ -39,6 +40,7 @@ def main() -> None:
         "fused_readout": fused_readout.run,
         "repair": repair_bench.run,
         "chaos": chaos_soak.run,
+        "encoder": encoder_serving.run,
     }
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

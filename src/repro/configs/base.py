@@ -81,6 +81,12 @@ class ModelConfig:
     # --- perf-hillclimb knobs (EXPERIMENTS.md section Perf) ---
     attn_probs_bf16: bool = False  # cast attention probs to bf16 before PV
     attn_chunk: Optional[int] = 1024  # flash-style KV-block online softmax (None -> naive)
+    # "auto" keeps the chunked/naive XLA path; "flash" routes train-mode
+    # self-attention through the Pallas TPU kernel
+    # (kernels/flash_attention.py; interpret mode off-TPU), used by the
+    # serving encoder stage whose bucketed shapes satisfy the kernel's
+    # block-divisibility; "sdpa" forces the naive path (A/B baseline).
+    attn_impl: str = "auto"  # auto | flash | sdpa
     moe_impl: str = "scatter"  # scatter (zero-flop dispatch) | einsum (GShard one-hot)
 
     @property

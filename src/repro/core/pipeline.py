@@ -230,7 +230,8 @@ def solve_es(
     """Solve one ES instance per the paper's iterative workflow (Sec. IV-A).
 
     With ``backend`` (any :class:`repro.solvers.base.SolverBackend` -- the
-    COBI chip farm, a host thread pool; ``farm=`` is the historical alias),
+    COBI chip farm, a host thread pool; ``farm=`` is a deprecated spelling
+    of the same parameter, kept for old callers),
     all of the instance's stochastic-rounding iterations (and, when
     decomposing, each window's iterations) go through the backend as one
     submission round instead of one inline solver call per iteration.
@@ -491,8 +492,8 @@ def iter_solve_es(
 ):
     """Generator form of :func:`solve_es` over a :class:`SolverBackend`.
 
-    ``backend`` is any submit->future backend (``farm=`` is the historical
-    alias for the same parameter); the solver must be in the
+    ``backend`` is any submit->future backend (``farm=`` is a deprecated
+    spelling of the same parameter); the solver must be in the
     ``repro.solvers.base`` registry.  Yields once per submission round (one
     round for a direct solve; a decomposed solve yields once per window under
     ``pipeline_windows=False`` and only on unresolved frontiers under the
@@ -717,5 +718,18 @@ def drive_with_backend(gen, backend) -> SolveReport:
         return done.value
 
 
-# Historical alias (pre-SolverBackend name).
-drive_with_farm = drive_with_backend
+def drive_with_farm(gen, farm) -> SolveReport:
+    """Deprecated pre-``SolverBackend`` name for :func:`drive_with_backend`.
+
+    The driver has been backend-generic (farms, thread pools, anything
+    speaking submit->future) for several releases; use
+    :func:`drive_with_backend`."""
+    import warnings
+
+    warnings.warn(
+        "drive_with_farm is deprecated; use drive_with_backend (the driver "
+        "accepts any SolverBackend, not just a CobiFarm)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return drive_with_backend(gen, farm)

@@ -76,7 +76,11 @@ def scores_from_embeddings(e: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     Deliberately NOT jit'd: sentence counts vary per request, so a jit cache
     here would recompile (and grow) per distinct document length for ~8
     dispatches of savings."""
-    e = e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+    # The eps guard only bites on an exactly-zero row (a sentence fully
+    # truncated by the backbone's max_len) -- that row scores mu=0, beta=0
+    # instead of NaN-poisoning the whole objective; nonzero rows divide by
+    # their exact norm, unchanged.
+    e = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-9)
     doc = jnp.mean(e, axis=0)
     doc = doc / jnp.maximum(jnp.linalg.norm(doc), 1e-9)
     mu = e @ doc

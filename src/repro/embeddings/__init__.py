@@ -3,3 +3,9 @@ from repro.embeddings.encoder import (  # noqa: F401
     HashedBowEncoder,
     problem_from_sentences,
 )
+from repro.embeddings.serving import (  # noqa: F401
+    EncodeFuture,
+    EncodeReceipt,
+    EncoderStage,
+    EncoderStats,
+)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import hashlib
 import re
+from collections import OrderedDict
 from typing import List, Sequence
 
 import jax
@@ -25,22 +26,47 @@ _WORD_RE = re.compile(r"[a-z0-9']+")
 
 
 class HashedBowEncoder:
-    def __init__(self, dim: int = 256, seed: int = 0):
+    def __init__(self, dim: int = 256, seed: int = 0,
+                 cache_words: int = 65536):
         self.dim = dim
         self.seed = seed
-        self._word_cache: dict[str, np.ndarray] = {}
+        # LRU-bounded: word vectors are pure functions of (seed, word), so
+        # eviction only costs a recompute -- but under open-loop serving an
+        # unbounded dict grows with every novel token ever seen.
+        self.cache_words = max(0, cache_words)
+        self._word_cache: OrderedDict[str, np.ndarray] = OrderedDict()
+        self._hits = 0
+        self._misses = 0
 
     def _word_vec(self, word: str) -> np.ndarray:
-        # Word vectors are pure functions of (seed, word); under serving load
-        # the vocabulary repeats across requests, so memoize per encoder.
+        # Under serving load the vocabulary repeats across requests, so
+        # memoize per encoder (LRU, capped at cache_words entries).
         v = self._word_cache.get(word)
-        if v is None:
-            h = hashlib.blake2b(f"{self.seed}:{word}".encode(), digest_size=8).digest()
-            rng = np.random.default_rng(int.from_bytes(h, "little"))
-            v = rng.standard_normal(self.dim)
-            v /= np.linalg.norm(v)
+        if v is not None:
+            self._hits += 1
+            self._word_cache.move_to_end(word)
+            return v
+        self._misses += 1
+        h = hashlib.blake2b(f"{self.seed}:{word}".encode(), digest_size=8).digest()
+        rng = np.random.default_rng(int.from_bytes(h, "little"))
+        v = rng.standard_normal(self.dim)
+        v /= np.linalg.norm(v)
+        if self.cache_words:
             self._word_cache[word] = v
+            while len(self._word_cache) > self.cache_words:
+                self._word_cache.popitem(last=False)
         return v
+
+    def cache_stats(self) -> dict:
+        """Word-vector cache health (surfaced by ``engine.stats()``)."""
+        total = self._hits + self._misses
+        return {
+            "size": len(self._word_cache),
+            "capacity": self.cache_words,
+            "hits": self._hits,
+            "misses": self._misses,
+            "hit_rate": self._hits / total if total else 0.0,
+        }
 
     def encode(self, sentences: Sequence[str]) -> jnp.ndarray:
         out = np.zeros((len(sentences), self.dim), np.float32)

@@ -1,0 +1,370 @@
+"""Batched backbone-encoder serving stage: continuous batching in front of
+the Ising farm.
+
+The serving engine's hot path was hashed bag-of-words; this module puts the
+real neural encoder (``models/`` + ``configs/sbert_paper.py``; optionally
+the Pallas flash-attention kernel via ``cfg.attn_impl="flash"``) behind the
+same submit->future discipline the COBI farm uses, as a SECOND pipeline
+stage whose drains run concurrently with Ising drains:
+
+  * ``submit(texts)`` tokenizes into a power-of-two padded-length bucket
+    (chosen from the job's OWN token count -- results never depend on
+    batch-mates) and returns an :class:`EncodeFuture` immediately.
+  * A background drain thread grabs everything queued, groups jobs by
+    length bucket, pads the batch and segment-count dimensions to
+    power-of-two buckets (same jit-shape-churn discipline as the farm's
+    ``BATCH_BUCKET``/``REPLICA_BUCKET``), and runs ONE jitted
+    ``embed_sentences`` launch per group.
+  * Padding is inert by construction: the backbone is causal, so trailing
+    PAD tokens cannot affect real-token hidden states; batch rows and
+    pooling one-hot columns are independent per row/segment.  Same
+    sentences => identical embeddings (and identical mu/beta) regardless
+    of batch composition -- tested.
+  * Each job's :class:`EncodeReceipt` meters encoder wall seconds (launch
+    wall time attributed by token share), h2d/d2h bytes, and the stage
+    clock -- the encoder's line on the request bill, next to chip time.
+  * ``prewarm()`` sweeps the (batch, length, segment) shape lattice so the
+    first open-loop burst hits compiled code, exactly like the farm's.
+
+``encode(texts)`` is the synchronous face (submit + wait), making a stage
+usable anywhere a plain encoder is accepted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import embed_sentences
+from repro.solvers.base import AwaitableFuture
+
+# Power-of-two padding bases (the farm's BATCH_BUCKET/REPLICA_BUCKET idiom):
+# batches pad to 4,8,16..., segment counts to 8,16,..., token lengths to
+# 64,128,... so background drains stay within a handful of jit shapes.
+BATCH_BUCKET = 4
+SEG_BUCKET = 8
+MIN_LEN_BUCKET = 64
+
+
+def _bucket(n: int, base: int) -> int:
+    b = base
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _embed_batch(cfg, params, tokens, segs, n_segments):
+    emb = embed_sentences(cfg, params, tokens, segs, n_segments)
+    norm = jnp.linalg.norm(emb, axis=-1, keepdims=True)
+    return emb / jnp.maximum(norm, 1e-9)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodeReceipt:
+    """Per-job encoder bill, the counterpart of the farm's ``JobReceipt``."""
+
+    job_id: int
+    tag: Optional[int]
+    encoder_seconds: float  # launch wall time, attributed by token share
+    bytes_h2d: int  # tokens + segment ids shipped (this job's padded rows)
+    bytes_d2h: int  # embeddings returned (real segments only)
+    batch_jobs: int  # jobs sharing the launch that served this one
+    padded_len: int  # length bucket the job encoded at
+    sim_completed: float  # stage clock (seconds since stage start) at finish
+
+
+class EncodeFuture(AwaitableFuture):
+    """Handle to one submitted encode job; ``result()`` -> (n, d) unit-norm
+    embeddings, ``receipt()`` -> :class:`EncodeReceipt` once done."""
+
+    __slots__ = ("job_id", "_receipt")
+
+    def __init__(self, job_id: int):
+        super().__init__()
+        self.job_id = job_id
+        self._receipt: Optional[EncodeReceipt] = None
+
+    def _describe(self) -> str:
+        return f"encode job {self.job_id}"
+
+    def receipt(self, timeout: Optional[float] = None) -> EncodeReceipt:
+        self._wait(timeout)
+        return self._receipt
+
+
+@dataclasses.dataclass
+class _EncodeJob:
+    job_id: int
+    n_items: int
+    tokens: np.ndarray  # (L,) int32, padded to the length bucket
+    segs: np.ndarray  # (L,) int32, -1 on pad/specials
+    n_tokens: int  # real (non-PAD) token count, for share attribution
+    future: EncodeFuture
+    tag: Optional[int]
+
+
+@dataclasses.dataclass
+class EncoderStats:
+    jobs: int = 0
+    launches: int = 0  # jitted embed calls (one per (bucket) group)
+    drains: int = 0  # drain-thread wakeups that executed work
+    tokens: int = 0  # real tokens encoded
+    busy_seconds: float = 0.0  # wall time inside launches
+    mean_batch: float = 0.0  # jobs per launch
+    sec_per_token: float = 0.0  # EWMA, feeds admission's encode estimate
+    prewarmed: int = 0  # shapes compiled by prewarm()
+
+
+class EncoderStage:
+    """Continuous-batching serving path for a backbone sentence encoder.
+
+    ``policy`` mirrors the backend protocol the engine's driver speaks:
+    the stage is always self-draining (its own thread supplies the drain),
+    so the driver only ever calls :meth:`flush_hint`.
+    """
+
+    policy = "background"
+
+    def __init__(self, cfg, params, *, max_len: int = 1024,
+                 power_w: float = 45.0, linger: float = 0.0,
+                 attn_impl: Optional[str] = None):
+        """``cfg``/``params`` are the backbone config + weights
+        (:func:`EncoderStage.tiny` builds the CPU-smoke pair).  ``power_w``
+        prices encoder seconds into joules on receipts; ``linger`` is an
+        optional batching debounce (seconds) before a drain grabs the
+        queue; ``attn_impl`` overrides ``cfg.attn_impl`` (e.g. ``"flash"``
+        to route through the Pallas kernel)."""
+        if attn_impl is not None:
+            cfg = cfg.replace(attn_impl=attn_impl)
+        self.cfg, self.params = cfg, params
+        self.tok = ByteTokenizer()
+        self.max_len = max_len
+        self.power_w = power_w
+        self.linger = linger
+        self._t0 = time.monotonic()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: List[_EncodeJob] = []
+        self._inflight: List[EncodeFuture] = []
+        self._driver: Optional[threading.Thread] = None
+        self._closed = False
+        self._flush = False
+        self._job_counter = 0
+        self._stats = EncoderStats()
+        self._ewma_spt = 0.0  # EWMA seconds per real token
+        # Wall-clock (t0, t1) of each launch -- intersect with the farm's
+        # busy intervals to measure encode-vs-anneal overlap.
+        self._busy: deque = deque(maxlen=4096)
+
+    @classmethod
+    def tiny(cls, seed: int = 0, **kwargs) -> "EncoderStage":
+        """CPU-smoke stage: the SBERT-paper config ``reduced()`` with
+        freshly initialized weights (production passes trained params)."""
+        from repro.configs.base import get_config
+        from repro.models import init_params
+
+        cfg = get_config("sbert-paper").reduced()
+        params = init_params(cfg, jax.random.key(seed))
+        kwargs.setdefault("max_len", cfg.max_seq_len)
+        return cls(cfg, params, **kwargs)
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, texts: Sequence[str], *, tag: Optional[int] = None
+               ) -> EncodeFuture:
+        """Enqueue one encode job; returns immediately.
+
+        The job's length bucket is a pure function of its own texts, so
+        its embeddings never depend on what else is queued."""
+        texts = list(texts)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("encoder stage is closed")
+            self._job_counter += 1
+            job_id = self._job_counter
+        fut = EncodeFuture(job_id)
+        if not texts:
+            fut._receipt = EncodeReceipt(job_id, tag, 0.0, 0, 0, 0, 0,
+                                         self.sim_now())
+            fut._finish(jnp.zeros((0, self.cfg.d_model), jnp.float32), None)
+            return fut
+        n_tok = min(1 + sum(len(t.encode("utf-8")) + 1 for t in texts),
+                    self.max_len)
+        length = min(_bucket(n_tok, MIN_LEN_BUCKET), self.max_len)
+        tokens, segs = self.tok.encode_sentences(texts, length)
+        job = _EncodeJob(job_id, len(texts), tokens, segs, n_tok, fut, tag)
+        with self._cond:
+            self._queue.append(job)
+            if self._driver is None:
+                self._driver = threading.Thread(
+                    target=self._drive, name="encoder-stage-drive",
+                    daemon=True,
+                )
+                self._driver.start()
+            self._cond.notify_all()
+        return fut
+
+    def encode(self, texts: Sequence[str]) -> jnp.ndarray:
+        """Synchronous face: submit + wait.  Makes a stage usable anywhere
+        a plain ``encoder.encode(texts)`` is accepted."""
+        return self.submit(texts).result()
+
+    def flush_hint(self) -> None:
+        """Non-blocking nudge: the current burst is over, drain what's
+        queued without waiting out the linger (the engine's round hook)."""
+        with self._cond:
+            self._flush = True
+            self._cond.notify_all()
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until every job submitted so far has resolved."""
+        self.flush_hint()
+        with self._lock:
+            futures = [j.future for j in self._queue] + list(self._inflight)
+        for fut in futures:
+            fut.wait(timeout)
+
+    def estimate_seconds(self, n_tokens: int) -> float:
+        """Predicted encode seconds for an ``n_tokens`` job (EWMA-based);
+        admission adds this to deadline-feasibility estimates."""
+        return self._ewma_spt * max(n_tokens, 1)
+
+    def prewarm(self, *, lengths: Optional[Sequence[int]] = None,
+                batches: Sequence[int] = (BATCH_BUCKET,),
+                segments: Sequence[int] = (SEG_BUCKET,)) -> int:
+        """Compile the (batch, length, segments) shape lattice up front so
+        the first open-loop burst hits compiled code (the farm's
+        ``prewarm()`` idiom one stage earlier).  Returns shapes compiled."""
+        if lengths is None:
+            lengths = []
+            length = MIN_LEN_BUCKET
+            while length <= min(self.max_len, 4 * MIN_LEN_BUCKET):
+                lengths.append(length)
+                length *= 2
+        compiled = 0
+        for length in lengths:
+            for b in batches:
+                for g in segments:
+                    tokens = jnp.zeros((b, length), jnp.int32)
+                    segs = jnp.full((b, length), -1, jnp.int32)
+                    _embed_batch(self.cfg, self.params, tokens, segs,
+                                 int(g)).block_until_ready()
+                    compiled += 1
+        with self._lock:
+            self._stats.prewarmed += compiled
+        return compiled
+
+    def busy_intervals(self) -> List[Tuple[float, float]]:
+        """Wall-clock (start, end) of recent encode launches
+        (``time.monotonic`` domain, same as the farm's)."""
+        with self._lock:
+            return list(self._busy)
+
+    def sim_now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def stats(self) -> EncoderStats:
+        with self._lock:
+            s = dataclasses.replace(self._stats)
+            s.mean_batch = s.jobs / s.launches if s.launches else 0.0
+            s.sec_per_token = self._ewma_spt
+            return s
+
+    def close(self) -> None:
+        """Finish queued work, then stop the drain thread.  Idempotent."""
+        with self._cond:
+            self._closed = True
+            driver, self._driver = self._driver, None
+            self._cond.notify_all()
+        if driver is not None:
+            driver.join(timeout=60.0)
+
+    def __enter__(self) -> "EncoderStage":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ internals
+
+    def _drive(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if not self._queue:
+                    return  # closed and empty
+                if self.linger > 0.0 and not self._flush and not self._closed:
+                    self._cond.wait(self.linger)
+                self._flush = False
+                jobs, self._queue = self._queue, []
+                self._inflight = [j.future for j in jobs]
+            try:
+                self._run_jobs(jobs)
+            except BaseException as exc:  # noqa: BLE001 -- never strand
+                for job in jobs:
+                    if not job.future.done():
+                        job.future._finish(None, exc)
+            finally:
+                with self._lock:
+                    self._inflight = []
+
+    def _run_jobs(self, jobs: List[_EncodeJob]) -> None:
+        with self._lock:
+            self._stats.drains += 1
+        groups: Dict[int, List[_EncodeJob]] = {}
+        for job in jobs:
+            groups.setdefault(len(job.tokens), []).append(job)
+        for length in sorted(groups):
+            self._run_group(length, groups[length])
+
+    def _run_group(self, length: int, jobs: List[_EncodeJob]) -> None:
+        b_pad = _bucket(len(jobs), BATCH_BUCKET)
+        g_pad = _bucket(max(j.n_items for j in jobs), SEG_BUCKET)
+        tokens = np.zeros((b_pad, length), np.int32)
+        segs = np.full((b_pad, length), -1, np.int32)
+        for i, job in enumerate(jobs):
+            tokens[i] = job.tokens
+            segs[i] = job.segs
+        t_start = time.monotonic()
+        out = _embed_batch(self.cfg, self.params, jnp.asarray(tokens),
+                           jnp.asarray(segs), int(g_pad))
+        out.block_until_ready()
+        t_end = time.monotonic()
+        wall = t_end - t_start
+        total_tok = sum(j.n_tokens for j in jobs)
+        with self._lock:
+            self._busy.append((t_start, t_end))
+            self._stats.launches += 1
+            self._stats.jobs += len(jobs)
+            self._stats.tokens += total_tok
+            self._stats.busy_seconds += wall
+            spt = wall / max(total_tok, 1)
+            self._ewma_spt = (spt if self._ewma_spt == 0.0
+                              else 0.7 * self._ewma_spt + 0.3 * spt)
+        done = self.sim_now()
+        d = int(self.cfg.d_model)
+        for i, job in enumerate(jobs):
+            emb = out[i, :job.n_items]
+            receipt = EncodeReceipt(
+                job_id=job.job_id,
+                tag=job.tag,
+                encoder_seconds=wall * (job.n_tokens / max(total_tok, 1)),
+                bytes_h2d=2 * length * 4,  # this job's tokens + seg rows
+                bytes_d2h=job.n_items * d * 4,
+                batch_jobs=len(jobs),
+                padded_len=length,
+                sim_completed=done,
+            )
+            job.future._receipt = receipt
+            job.future._finish(emb, None)

@@ -106,6 +106,7 @@ import math
 import threading
 import time
 import traceback
+from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -457,6 +458,11 @@ class CobiFarm:
         self._sim_time = 0.0
         self._cycle = 0  # global chip-cycle counter
         self._drains = 0
+        # Wall-clock (t0, t1) of recent drain executions: the overlap
+        # denominator's counterpart -- an encoder stage intersects these
+        # with its own launch intervals to measure encode-vs-anneal
+        # concurrency (same time.monotonic domain).
+        self._busy_intervals: deque = deque(maxlen=4096)
         self._completed = 0  # cumulative jobs completed (survives release)
         self._bytes_h2d = 0
         self._bytes_d2h = 0
@@ -723,6 +729,13 @@ class CobiFarm:
         with self._lock:
             return self._sim_time
 
+    def busy_intervals(self) -> List[Tuple[float, float]]:
+        """Wall-clock (start, end) of recent drain executions
+        (``time.monotonic`` domain) -- intersect with an encoder stage's
+        intervals to measure encode-vs-anneal pipeline overlap."""
+        with self._lock:
+            return list(self._busy_intervals)
+
     def stats(self) -> FarmStats:
         with self._lock:
             quarantined: Tuple[int, ...] = ()
@@ -939,6 +952,7 @@ class CobiFarm:
             gkey = (job.steps, job.dt, job.ks_max, job.reduce)
             groups.setdefault(gkey, []).append(job)
         first_exc: Optional[BaseException] = None
+        t_exec0 = time.monotonic()
         for gkey in sorted(groups):
             jobs = groups[gkey]
             tiers = replica_tiers(
@@ -969,6 +983,8 @@ class CobiFarm:
                         raise
                     if first_exc is None:
                         first_exc = exc
+        with self._lock:
+            self._busy_intervals.append((t_exec0, time.monotonic()))
         if first_exc is not None:
             raise first_exc
         return len(pending)

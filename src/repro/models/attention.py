@@ -149,9 +149,23 @@ def self_attention(
 
     probs_dtype = jnp.bfloat16 if getattr(cfg, "attn_probs_bf16", False) else None
     chunk = getattr(cfg, "attn_chunk", None)
+    impl = getattr(cfg, "attn_impl", "auto")
 
     if mode in ("train", "prefill"):
-        if chunk and s % chunk == 0 and s > chunk:
+        # Pallas flash kernel: train-mode only (the kernel derives positions
+        # from block indices, which matches the contiguous arange positions
+        # of train/encode calls but not a prefill continuation), and the
+        # sequence must tile into the kernel's q/kv blocks.  The encoder
+        # stage's power-of-two length buckets satisfy both by construction.
+        if (impl == "flash" and mode == "train"
+                and s % min(128, s) == 0 and q.shape[-1] <= 128):
+            from repro.kernels.flash_attention import flash_attention
+
+            out = flash_attention(
+                q, k, v, causal=causal, window=w,
+                interpret=jax.default_backend() != "tpu",
+            )
+        elif (impl != "sdpa" and chunk and s % chunk == 0 and s > chunk):
             out = _sdpa_chunked(
                 q, k, v, positions, scale, causal=causal, window=w, chunk=chunk,
                 probs_dtype=probs_dtype,

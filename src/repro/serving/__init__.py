@@ -5,6 +5,14 @@ from repro.serving.admission import (  # noqa: F401
     AdmissionTicket,
     EngineOverloadedError,
 )
+from repro.serving.api import (  # noqa: F401
+    KofnSpec,
+    SelectionRequest,
+    SelectionResponse,
+    encode_texts,
+    problem_from_embeddings,
+    problem_from_spec,
+)
 from repro.serving.calibration import (  # noqa: F401
     BackendCostModel,
     CalibrationProfile,

@@ -213,6 +213,7 @@ class AdmissionController:
         steps: int = 400,
         iterations: int = 1,
         quality_floor: Optional[float] = None,
+        extra_seconds: float = 0.0,
     ) -> AdmissionTicket:
         """Gate one request carrying ``len(job_lanes)`` planned solve jobs.
 
@@ -221,6 +222,10 @@ class AdmissionController:
         :class:`EngineOverloadedError`.  ``job_lanes`` are the estimated spin
         counts of the request's solve jobs (iterations x decomposition
         windows); ``sim_now`` is the primary backend's current clock.
+        ``extra_seconds`` is pre-solve pipeline time the request must spend
+        before its first job can launch (the engine passes the encoder
+        stage's EWMA encode estimate) -- it eats deadline slack in the
+        feasibility check but never counts as backend work.
         """
         cfg = self.config
         with self._lock:
@@ -241,7 +246,11 @@ class AdmissionController:
                 if soft > 0 and depth >= soft:
                     eff_reads = min(reads, cfg.reads_floor)
                     degraded = eff_reads < reads
-            watermark = self._effective_watermark_locked()
+            # Encoder time spends the same deadline slack a wider watermark
+            # would; folding it in keeps both feasibility branches honest.
+            watermark = self._effective_watermark_locked() + max(
+                extra_seconds, 0.0
+            )
             backend = None
             predicted = 0.0
             est = 0.0

@@ -1,9 +1,19 @@
 """Continuous serving engine: enqueueing submit(), one driver loop, SLO-aware
 admission.
 
-Request -> sentence split -> embed (backbone or hashed BoW) -> improved Ising
--> decomposition if oversized -> stochastic-rounding iterations on the
-selected solver backend -> M-sentence summary.
+Request -> encode (backbone stage, backbone inline, or hashed BoW) ->
+k-of-n Ising formulation -> decomposition if oversized ->
+stochastic-rounding iterations on the selected solver backend -> the
+selected m items.
+
+The request surface is **workload-generic**: the native request is a
+:class:`repro.serving.api.SelectionRequest` (items + a
+:class:`~repro.serving.api.KofnSpec` objective -- relevance source,
+pairwise redundancy, m, lambda), and every workload in
+``repro.workloads`` (summarize, dedup, rerank, multidoc) reduces to it.
+``submit(text=...)`` / :class:`SummarizeRequest` remain as thin
+compatibility views that build the equivalent centroid-relevance
+SelectionRequest -- bit-identical selections by construction, tested.
 
 The serving surface is **continuous**, not batch-shaped:
 
@@ -11,6 +21,14 @@ The serving surface is **continuous**, not batch-shaped:
   request id, stamps the per-request PRNG key, and returns a
   :class:`ResponseFuture` (``result(timeout=)``, ``add_done_callback``,
   ``cancel()``, ``await`` -- the ``FarmFuture`` contract, one level up).
+* With an :class:`repro.embeddings.EncoderStage` as the ``encoder``, the
+  neural backbone becomes a SECOND continuous-batching pipeline stage in
+  front of the farm: requests' encode jobs batch into jitted
+  ``embed_sentences`` launches on the stage's own drain thread while the
+  driver keeps draining OTHER requests' Ising rounds -- encode of request
+  B overlaps anneal of request A.  Encoder seconds/bytes/joules are
+  metered per request into the response next to chip time, and the
+  stage's EWMA encode estimate spends deadline slack at admission.
 * A background **driver thread** owns all in-flight requests.  Each request
   is a generator that submits its solve jobs (ALL planned decomposition
   windows, speculated ahead by the pipelined window planner) to the engine's
@@ -75,12 +93,19 @@ from repro.core.hardware import COBI, TABU_CPU
 from repro.core.metrics import normalized_objective, reference_bounds
 from repro.core.pipeline import iter_solve_es, solve_es
 from repro.data.text import split_sentences
-from repro.embeddings import HashedBowEncoder, problem_from_sentences
+from repro.embeddings import HashedBowEncoder
 from repro.farm import CobiFarm
 from repro.serving.admission import (
     AdmissionConfig,
     AdmissionController,
     EngineOverloadedError,
+)
+from repro.serving.api import (
+    KofnSpec,
+    SelectionRequest,
+    SelectionResponse,
+    encode_texts,
+    problem_from_embeddings,
 )
 from repro.serving.calibration import CalibrationProfile, default_profile
 from repro.serving.recovery import RecoveryContext, RetryPolicy
@@ -104,6 +129,13 @@ class RequestEvicted(RequestCancelled):
 
 @dataclasses.dataclass
 class SummarizeRequest:
+    """Legacy summarization request -- a compatibility view.
+
+    The engine converts it to the equivalent centroid-relevance
+    :class:`~repro.serving.api.SelectionRequest` (items =
+    ``split_sentences(text)``) at admission; selections are bit-identical
+    to the pre-redesign path by construction."""
+
     text: str
     m: int = 6
     request_id: int = 0  # <= 0 means "unassigned": the engine assigns one
@@ -114,43 +146,11 @@ class SummarizeRequest:
     deadline: Optional[float] = None
 
 
-@dataclasses.dataclass
-class SummarizeResponse:
-    request_id: int
-    summary: List[str]
-    selection: np.ndarray
-    objective: float
-    normalized: Optional[float]
-    wall_seconds: float
-    projected_solver_seconds: float  # hardware model (COBI 200us/solve etc.)
-    projected_energy_joules: float
-    solver_invocations: int
-    # Host<->device transfer attributed to this request's jobs by lane share
-    # of each drain launch (0 for host-solver backends) -- the SLO view of
-    # what the request cost beyond chip time.
-    bytes_h2d: int = 0
-    bytes_d2h: int = 0
-    sim_completed: float = 0.0  # absolute sim-clock finish of the last job
-    # deadline_met is None when the request had no deadline or no simulated
-    # hardware served it (host backends have no sim clock).
-    deadline_met: Optional[bool] = None
-    reads_used: int = 0  # effective anneal reads (< requested when degraded)
-    degraded: bool = False  # admission floored the reads under overload
-    # Routed serving: which backend served the request (dominant backend of a
-    # window-split decomposed request; None without a router), what the
-    # router predicted at admission, and what actually happened on the
-    # serving backend's clock -- the per-request predicted-vs-realized pair
-    # the profile's EWMA correction learns from.
-    backend_used: Optional[str] = None
-    predicted_seconds: float = 0.0
-    realized_seconds: float = 0.0
-    # Fault-tolerant serving: recovery attempts burned by this request's
-    # jobs, fault events seen (terminal faults retried/failed over PLUS
-    # readout corruption absorbed by validation repair), and whether any job
-    # finished on the failover backend.  All zero on a fault-free run.
-    retries: int = 0
-    faults_seen: int = 0
-    failed_over: bool = False
+# The response type is workload-generic (``selected`` items +
+# ``encoder_*`` metering on top of the original accounting fields);
+# summarization reads it through the ``summary`` property.  The old name
+# stays as an alias so callers' type hints and isinstance checks hold.
+SummarizeResponse = SelectionResponse
 
 
 class ResponseFuture(AwaitableFuture):
@@ -186,11 +186,13 @@ class ResponseFuture(AwaitableFuture):
 
 @dataclasses.dataclass
 class _Work:
-    """One admitted request waiting for (or owned by) the driver."""
+    """One admitted request waiting for (or owned by) the driver.
 
-    req: SummarizeRequest
+    ``req`` is always the workload-generic form -- legacy
+    :class:`SummarizeRequest` submissions are converted at admission."""
+
+    req: SelectionRequest
     key: jax.Array
-    sents: List[str]
     reads: int  # effective reads from admission (== cfg.reads unless degraded)
     degraded: bool
     future: ResponseFuture
@@ -255,6 +257,11 @@ class SummarizationEngine:
             solver="cobi", iterations=6, reads=8, int_range=14
         )
         self.encoder = encoder or HashedBowEncoder()
+        # An EncoderStage (submit->future encoder) is the second pipeline
+        # stage: _iter_one submits encode jobs and yields while they batch
+        # on the stage's drain thread, overlapping other requests' Ising
+        # rounds.  A plain encoder (.encode only) runs inline in the driver.
+        self.stage = self.encoder if hasattr(self.encoder, "submit") else None
         self.lam = lam
         self.score = score_against_exact
         self.retry = retry
@@ -331,27 +338,57 @@ class SummarizationEngine:
 
     # ------------------------------------------------------------------ API
 
-    def submit(self, text: str, m: int = 6, priority: int = 0,
-               deadline: Optional[float] = None) -> ResponseFuture:
+    def submit(self, text: Optional[str] = None, m: int = 6,
+               priority: int = 0, deadline: Optional[float] = None, *,
+               items: Optional[Sequence[str]] = None,
+               kofn: Optional[KofnSpec] = None,
+               workload: str = "selection") -> ResponseFuture:
         """Enqueue one request; returns an awaitable :class:`ResponseFuture`.
 
-        Runs admission control first: raises :class:`EngineOverloadedError`
-        when the queue-depth cap is hit or the deadline is infeasible (or
-        admits with degraded ``reads`` under ``overload="degrade"``).  The
-        request id is engine-assigned; its PRNG key is
+        Two faces, one path: ``submit(text, m)`` is the legacy
+        summarization surface (verbatim-compatible); ``submit(items=...,
+        kofn=KofnSpec(...))`` is the workload-generic one.  Both run
+        admission control first: raises :class:`EngineOverloadedError` when
+        the queue-depth cap is hit or the deadline is infeasible (or admits
+        with degraded ``reads`` under ``overload="degrade"``).  The request
+        id is engine-assigned; its PRNG key is
         ``fold_in(key(engine seed), id)``.
         """
+        if (text is None) == (items is None):
+            raise ValueError("pass exactly one of text= or items=")
+        if text is not None:
+            if kofn is not None:
+                raise ValueError("kofn= goes with items=, not text=")
+            req = SummarizeRequest(text=text, m=m, priority=priority,
+                                   deadline=deadline)
+        else:
+            req = SelectionRequest(
+                items=list(items),
+                kofn=kofn if kofn is not None else KofnSpec(m=m, lam=self.lam),
+                workload=workload, priority=priority, deadline=deadline,
+            )
+        return self.submit_request(req)
+
+    def submit_request(self, request) -> ResponseFuture:
+        """Enqueue a pre-built :class:`SelectionRequest` (e.g. from
+        ``repro.workloads.build_request``) or legacy
+        :class:`SummarizeRequest`.  A ``request_id <= 0`` is engine-assigned
+        (an explicit positive id is kept, remapped only on collision)."""
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
-            rid = self._next_rid_locked()
-        req = SummarizeRequest(text=text, m=m, request_id=rid,
-                               priority=priority, deadline=deadline)
-        return self._enqueue(req, jax.random.fold_in(self._base_key, rid))
+            rid = request.request_id
+            if rid <= 0 or self.admission.is_active(rid):
+                rid = self._next_rid_locked()
+        if rid != request.request_id:
+            request = dataclasses.replace(request, request_id=rid)
+        return self._enqueue(request, jax.random.fold_in(self._base_key, rid))
 
-    def run_batch(self, requests: Sequence[SummarizeRequest], seed: int = 0
-                  ) -> List[SummarizeResponse]:
-        """Serve a batch through the continuous driver; blocks until done.
+    def run_batch(self, requests: Sequence, seed: int = 0
+                  ) -> List[SelectionResponse]:
+        """Serve a batch (:class:`SelectionRequest` and/or legacy
+        :class:`SummarizeRequest`) through the continuous driver; blocks
+        until done.
 
         Thin wrapper over the ``submit()`` machinery: every request is
         enqueued (admission-controlled) and the call waits for all futures in
@@ -363,7 +400,7 @@ class SummarizationEngine:
         """
         return [f.result() for f in self.submit_batch(requests, seed)]
 
-    def submit_batch(self, requests: Sequence[SummarizeRequest], seed: int = 0
+    def submit_batch(self, requests: Sequence, seed: int = 0
                      ) -> List[ResponseFuture]:
         """Enqueue a batch atomically; returns one future per request.
 
@@ -376,7 +413,7 @@ class SummarizationEngine:
         """
         return self._enqueue_batch(requests, seed)
 
-    def stream(self, requests: Iterable[SummarizeRequest], seed: int = 0):
+    def stream(self, requests: Iterable, seed: int = 0):
         """Serve requests, yielding responses in COMPLETION order.
 
         The streaming face of the same driver loop: everything is enqueued
@@ -394,6 +431,19 @@ class SummarizationEngine:
         for _ in range(len(futures)):
             yield done_q.get().result()
 
+    def stats(self) -> dict:
+        """One serving-health snapshot across the engine's layers:
+        admission counters, the encoder's word-vector cache hit rate (BoW)
+        or stage counters (EncoderStage), and router state when routing."""
+        out: dict = {"admission": dataclasses.asdict(self.admission.stats())}
+        if hasattr(self.encoder, "cache_stats"):
+            out["encoder_cache"] = self.encoder.cache_stats()
+        if self.stage is not None:
+            out["encoder_stage"] = dataclasses.asdict(self.stage.stats())
+        if self.router is not None:
+            out["router"] = self.router.stats()
+        return out
+
     def close(self) -> None:
         """Finish queued/in-flight work, stop the driver, close the backend.
 
@@ -409,6 +459,8 @@ class SummarizationEngine:
         if driver is not None:
             driver.join(timeout=600.0)
         if not already:
+            if self.stage is not None:
+                self.stage.close()
             if self.backend is not None:
                 self.backend.close()
             if self.router is not None:
@@ -424,7 +476,7 @@ class SummarizationEngine:
 
     # ------------------------------------------------------------ internals
 
-    def _enqueue_batch(self, requests: Sequence[SummarizeRequest], seed: int
+    def _enqueue_batch(self, requests: Sequence, seed: int
                        ) -> List[ResponseFuture]:
         """Admit + enqueue a whole batch ATOMICALLY: the driver adopts all of
         it in one round, so the batch's jobs pack into shared drains exactly
@@ -457,7 +509,7 @@ class SummarizationEngine:
         self._enqueue_works(works)
         return [w.future for w in works]
 
-    def _enqueue(self, req: SummarizeRequest, key) -> ResponseFuture:
+    def _enqueue(self, req, key) -> ResponseFuture:
         work = self._admit_work(req, key)
         self._enqueue_works([work])
         return work.future
@@ -476,35 +528,61 @@ class SummarizationEngine:
             if rid not in taken and not self.admission.is_active(rid):
                 return rid
 
-    def _admit_work(self, req: SummarizeRequest, key) -> _Work:
-        sents = split_sentences(req.text)
+    def _to_selection(self, req) -> SelectionRequest:
+        """Canonicalize a request: legacy :class:`SummarizeRequest` becomes
+        the equivalent centroid-relevance :class:`SelectionRequest` (same
+        sentence split, same engine-level ``lam`` -- the exact ops of the
+        pre-redesign path, so selections are bit-identical)."""
+        if isinstance(req, SelectionRequest):
+            return req
+        return SelectionRequest(
+            items=split_sentences(req.text),
+            kofn=KofnSpec(m=req.m, lam=self.lam),
+            workload="summarize",
+            request_id=req.request_id,
+            priority=req.priority,
+            deadline=req.deadline,
+        )
+
+    def _admit_work(self, req, key) -> _Work:
+        sel = self._to_selection(req)
         try:
-            ticket = self._admit_ticket(req, sents)
+            ticket = self._admit_ticket(sel)
         except EngineOverloadedError as exc:
             # shed="evict-lowest": at the depth cap, try to evict one queued
             # request that ranks strictly below the newcomer, then re-admit.
             if (getattr(exc, "reason", "") != "depth"
                     or self.admission.config.shed != "evict-lowest"
-                    or not self._evict_for(req.priority, req.deadline)):
+                    or not self._evict_for(sel.priority, sel.deadline)):
                 raise
-            ticket = self._admit_ticket(req, sents)
-        return _Work(req=req, key=key, sents=sents, reads=ticket.reads,
+            ticket = self._admit_ticket(sel)
+        return _Work(req=sel, key=key, reads=ticket.reads,
                      degraded=ticket.degraded,
-                     future=ResponseFuture(self, req.request_id),
+                     future=ResponseFuture(self, sel.request_id),
                      backend_name=ticket.backend,
                      predicted_seconds=ticket.predicted_seconds,
                      sim_at_admit=ticket.sim_at_admit)
 
-    def _admit_ticket(self, req: SummarizeRequest, sents: List[str]):
+    def _admit_ticket(self, sel: SelectionRequest):
+        extra = 0.0
+        if self.stage is not None and sel.deadline is not None:
+            # The encode stage runs before the first solve job can launch:
+            # its EWMA estimate spends deadline slack at admission (an
+            # approximation -- encode wall seconds against the sim clock).
+            texts = encode_texts(sel.kofn, sel.items)
+            if texts:
+                n_tok = 1 + sum(len(t.encode("utf-8")) + 1 for t in texts)
+                extra = self.stage.estimate_seconds(n_tok)
         return self.admission.admit(
-            req.request_id,
-            self._estimate_job_lanes(len(sents), req.m),
+            sel.request_id,
+            self._estimate_job_lanes(len(sel.items), sel.kofn.m),
             self.cfg.reads,
-            req.deadline,
+            sel.deadline,
             self.backend.sim_now() if self.backend is not None else 0.0,
-            priority=req.priority,
+            priority=sel.priority,
             steps=self.cfg.steps,
             iterations=self.cfg.iterations,
+            extra_seconds=extra,
         )
 
     def _evict_for(self, priority: int, deadline: Optional[float]) -> bool:
@@ -606,6 +684,14 @@ class SummarizationEngine:
                 except BaseException as exc:  # noqa: BLE001 -- fail request
                     self._resolve(work, None, exc)
             active = still
+            if active and self.stage is not None:
+                # The encoder stage is always self-draining; the hint tells
+                # it this round's submissions are over so a lingering batch
+                # window closes (non-blocking, no-op with linger=0).
+                try:
+                    self.stage.flush_hint()
+                except Exception:  # noqa: BLE001
+                    traceback.print_exc()
             if active and self.backend is not None:
                 # With a router, EVERY routable backend gets its round
                 # barrier -- spilled jobs must resolve too (the host pool's
@@ -650,18 +736,46 @@ class SummarizationEngine:
         """Generator serving one request; yields once per backend round."""
         req = work.req
         t0 = time.perf_counter()
-        sents = work.sents
+        items = req.items
+        m = req.kofn.m
         cfg = self.cfg
         if work.reads != cfg.reads:
             cfg = dataclasses.replace(cfg, reads=work.reads)
-        if len(sents) <= req.m:
-            return SummarizeResponse(
-                req.request_id, sents, np.ones(len(sents), np.int32),
+        if len(items) <= m:
+            return SelectionResponse(
+                req.request_id, list(items), np.ones(len(items), np.int32),
                 0.0, None, time.perf_counter() - t0, 0.0, 0.0, 0,
-                reads_used=cfg.reads,
+                reads_used=cfg.reads, workload=req.workload,
             )
-        problem = problem_from_sentences(sents, req.m, lam=self.lam,
-                                         encoder=self.encoder)
+        # ---- encode stage: the request's texts (items, plus the query row
+        # for query relevance; empty when mu/beta are both given) ----
+        texts = encode_texts(req.kofn, items)
+        enc_seconds = 0.0
+        enc_bytes = 0
+        enc_power = 0.0
+        if not texts:
+            e = None
+        elif self.stage is not None:
+            efut = self.stage.submit(texts, tag=req.request_id)
+            # Yield to the driver while the stage batches and runs the
+            # encode: other requests' Ising rounds keep draining, so encode
+            # of this request overlaps anneal of its neighbours.  The short
+            # bounded wait keeps the manual-policy round loop from
+            # hot-spinning without stalling it a full encode.
+            while not efut.wait(0.002):
+                yield
+            e = efut.result()
+            rcpt = efut.receipt()
+            enc_seconds = rcpt.encoder_seconds
+            enc_bytes = rcpt.bytes_h2d + rcpt.bytes_d2h
+            enc_power = self.stage.power_w
+        else:
+            t_enc = time.perf_counter()
+            e = self.encoder.encode(texts)
+            enc_seconds = time.perf_counter() - t_enc
+            enc_bytes = int(np.asarray(e).nbytes)
+            enc_power = self._hardware().host_power_w
+        problem = problem_from_embeddings(req.kofn, items, e)
         if problem.n > COBI_MAX_SPINS and not cfg.decompose:
             cfg = dataclasses.replace(cfg, decompose=True)
         backend_used = None
@@ -730,10 +844,10 @@ class SummarizationEngine:
         deadline_met = None
         if eff_deadline is not None and report.sim_completed > 0.0:
             deadline_met = report.sim_completed <= eff_deadline
-        summary = [sents[i] for i in np.nonzero(report.selection)[0]]
-        return SummarizeResponse(
+        selected = [items[i] for i in np.nonzero(report.selection)[0]]
+        return SelectionResponse(
             request_id=req.request_id,
-            summary=summary,
+            selected=selected,
             selection=report.selection,
             objective=report.objective,
             normalized=normalized,
@@ -754,6 +868,10 @@ class SummarizationEngine:
                 recovery.faults_seen if recovery is not None else 0),
             failed_over=bool(recovery.failed_over) if recovery is not None
             else False,
+            workload=req.workload,
+            encoder_seconds=enc_seconds,
+            encoder_bytes=enc_bytes,
+            encoder_joules=enc_seconds * enc_power,
         )
 
     def _recovery_for(self, backend, eff_deadline: Optional[float],

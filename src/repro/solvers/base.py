@@ -234,6 +234,12 @@ class AwaitableFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block up to ``timeout`` seconds; True once done.  Unlike
+        ``result()`` this never raises -- the engine's driver uses short
+        bounded waits to pipeline without hot-spinning its round loop."""
+        return self._event.wait(timeout)
+
     def result(self, timeout: Optional[float] = None):
         self._wait(timeout)
         if self._error is not None:
