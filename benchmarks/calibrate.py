@@ -4,12 +4,25 @@ Runs the TTS/ETS calibration sweep (``repro.serving.calibration.
 calibrate_profile``: host wall seconds per solver invocation -> quadratic
 pool latency fit; Eq.-14 MLE success probability -> quality-gap knots) and
 writes the versioned ``CalibrationProfile`` JSON the router loads at serve
-time.  The checked-in artifact lives at
-``benchmarks/CALIBRATION_cobi_pool.json`` and is what makes routing
-decisions reproducible across machines; refresh it with::
+time.  The checked-in artifacts live at
+``benchmarks/CALIBRATION_cobi_pool.json`` (farm + host pool) and
+``benchmarks/CALIBRATION_mcmc.json`` (farm + host pool + MCMC annealer
+bank, ``--backend mcmc``); refresh them with::
 
   PYTHONPATH=src:. python benchmarks/calibrate.py \
       --out benchmarks/CALIBRATION_cobi_pool.json
+  PYTHONPATH=src:. python benchmarks/calibrate.py --backend mcmc \
+      --out benchmarks/CALIBRATION_mcmc.json
+
+``--backend mcmc`` runs a SECOND quality sweep with ``solver="mcmc"``: the
+annealer bank's latency/energy are the Snowball-class hardware constants
+(exact by construction), but Metropolis search quality is different physics
+from the oscillator chip and must be measured.  The measured knots are
+derated by ``calibrate_profile``'s ``mcmc_quality_derate`` (the bit-exact
+synchronous simulation upper-bounds the asynchronous hardware's success
+probability) -- the derated gap is what lets a ``quality_floor`` genuinely
+veto the cheaper backend.  With ``--pool-solver tabu`` the farm's COBI
+quality knots get their own sweep (the pool's tabu knots no longer apply).
 
 ``--tiny`` shrinks the sweep for CI smoke runs (fit quality is NOT
 representative; CI only checks that the fit pipeline runs and the artifact
@@ -23,7 +36,7 @@ import argparse
 
 
 def run(tiny: bool = False, out: str | None = None,
-        pool_solver: str = "cobi") -> "object":
+        pool_solver: str = "cobi", backend: str | None = None) -> "object":
     from repro.serving.calibration import CalibrationProfile, calibrate_profile
 
     kw = (
@@ -31,24 +44,37 @@ def run(tiny: bool = False, out: str | None = None,
         if tiny else
         dict(sizes=(10, 20, 40), n_benchmarks=3, iterations=8, steps=300)
     )
-    prof = calibrate_profile(pool_solver=pool_solver, **kw)
+    if backend not in (None, "mcmc"):
+        raise SystemExit(f"--backend must be 'mcmc', got {backend!r}")
+    mcmc_workers = 4 if backend == "mcmc" else 0
+    prof = calibrate_profile(pool_solver=pool_solver,
+                             mcmc_workers=mcmc_workers, **kw)
     pool = prof.model("pool")
     farm = prof.model("farm")
+    mcmc = prof.models.get("mcmc")
     for n in kw["sizes"]:
         jobs = [(n, 8)]
-        print(
+        line = (
             f"n={n:3d}  pool_s={pool.request_seconds(jobs, kw['steps']):.6f}"
             f"  farm_s={farm.request_seconds(jobs, kw['steps']):.6f}"
             f"  p_succ={dict(zip(pool.quality_n, pool.quality_p))[n]:.3f}"
         )
+        if mcmc is not None:
+            line += (
+                f"  mcmc_s={mcmc.request_seconds(jobs, kw['steps']):.6f}"
+                f"  mcmc_p={dict(zip(mcmc.quality_n, mcmc.quality_p))[n]:.3f}"
+            )
+        print(line)
     if out:
         prof.save(out)
         # Round-trip check: the artifact must reproduce its own predictions.
         back = CalibrationProfile.load(out)
         probe = [(max(kw["sizes"]), 8)]
-        assert back.model("pool").request_seconds(probe, kw["steps"]) == \
-            pool.request_seconds(probe, kw["steps"])
-        print(f"wrote {out} (schema {back.version})")
+        for name in prof.models:
+            assert back.model(name).request_seconds(probe, kw["steps"]) == \
+                prof.model(name).request_seconds(probe, kw["steps"])
+        print(f"wrote {out} (schema {back.version}, "
+              f"models {sorted(back.models)})")
     return prof
 
 
@@ -60,5 +86,9 @@ if __name__ == "__main__":
                     help="write the profile JSON to this path")
     ap.add_argument("--pool-solver", default="cobi",
                     help="solver the host pool backend runs (default: cobi)")
+    ap.add_argument("--backend", default=None, choices=("mcmc",),
+                    help="additionally fit this solver family's quality "
+                         "knots (adds its model to the profile)")
     args = ap.parse_args()
-    run(tiny=args.tiny, out=args.out, pool_solver=args.pool_solver)
+    run(tiny=args.tiny, out=args.out, pool_solver=args.pool_solver,
+        backend=args.backend)

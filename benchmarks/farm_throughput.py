@@ -36,6 +36,16 @@ backends (chip energy for farm jobs, watts x measured worker wall time for
 pool jobs).  Routing decisions come from the checked-in
 ``benchmarks/CALIBRATION_cobi_pool.json`` profile (override with
 ``--profile``), so the scenario is reproducible from the artifact.
+
+``--route`` also runs the QUALITY-FLOOR frontier (no ``--policy`` needed):
+the same job mix is served through a three-family
+:class:`repro.serving.router.BackendRouter` -- COBI farm, MCMC annealer
+bank, tabu host pool, cost models from the checked-in
+``benchmarks/CALIBRATION_mcmc.json`` -- once per distinct fitted
+quality-gap level.  A loose floor routes min-energy traffic to the cheap
+annealer bank; tightening past its fitted gap hands the traffic back to
+the higher-quality families.  Decision shares and realized joules/request
+per floor are emitted and gated.
 """
 
 from __future__ import annotations
@@ -73,6 +83,11 @@ TIMED_REPS = 3  # serves per measurement; byte deltas are divided by this
 
 DEFAULT_PROFILE = os.path.join(os.path.dirname(__file__),
                                "CALIBRATION_cobi_pool.json")
+# Three-family profile (cobi farm + tabu pool + mcmc annealer bank) for the
+# quality-floor routing frontier; fitted by
+# ``calibrate.py --backend mcmc --pool-solver tabu``.
+MCMC_PROFILE = os.path.join(os.path.dirname(__file__),
+                            "CALIBRATION_mcmc.json")
 
 
 def _timed_serves(engine, docs, reps=TIMED_REPS):
@@ -352,6 +367,91 @@ def run(tiny: bool = False, json_path: str | None = None,
                   s["wall"] / s["offered"] * 1e6, derived,
                   rps=goodput, joules_per_req=s["joules"])
 
+    # -- quality-floor routing frontier: farm vs mcmc bank vs tabu pool ----
+    # Sweeps the router's quality_floor over the checked-in three-family
+    # profile (benchmarks/CALIBRATION_mcmc.json: cobi farm + tabu host pool
+    # + MCMC annealer bank) at objective=min-energy.  Every job is REALLY
+    # served on the backend the router picked, so the frontier's energy
+    # numbers come from realized receipts (chip joules / annealer joules /
+    # host watts x wall).  Floors are derived from the profile's own fitted
+    # quality gaps at the mix's largest instance: one frontier point per
+    # distinct gap level, so a loose floor lets the cheap annealer bank take
+    # the traffic and tightening past its fitted gap hands it back to the
+    # higher-quality families.
+    if route:
+        from repro.core.formulation import improved_ising
+        from repro.core.rounding import quantize_ising
+        from repro.data.synthetic import synthetic_benchmark
+        from repro.farm import McmcPoolBackend
+        from repro.serving import (BackendRouter, CalibrationProfile,
+                                   RouterConfig)
+        from repro.solvers.base import ThreadPoolBackend
+
+        prof3_path = MCMC_PROFILE if profile is None else profile
+        prof3 = CalibrationProfile.load(prof3_path)
+        have_mcmc = "mcmc" in prof3.models
+        fjobs = []
+        for i, n in enumerate(sizes):
+            p = synthetic_benchmark(300 + i, n, max(2, n // 4), lam=0.5)
+            inst = quantize_ising(
+                improved_ising(p), "deterministic", int_range=14
+            ).ising
+            check_programmable(inst)
+            fjobs.append(inst)
+        nmax = max(inst.n for inst in fjobs)
+        gaps = {name: prof3.model(name).quality_gap(nmax, iterations)
+                for name in prof3.models}
+        levels = sorted(set(gaps.values()))
+        floors = [None] + [
+            (levels[i] + levels[i + 1]) / 2.0 for i in range(len(levels) - 1)
+        ]
+        for fi, floor in enumerate(floors):
+            backends: dict = {"farm": CobiFarm(4)}
+            if "pool" in prof3.models:
+                backends["pool"] = ThreadPoolBackend(
+                    prof3.model("pool").solver, workers=4)
+            if have_mcmc:
+                backends["mcmc"] = McmcPoolBackend(
+                    workers=max(prof3.model("mcmc").parallelism, 1))
+            router = BackendRouter(
+                backends, CalibrationProfile.load(prof3_path),
+                RouterConfig(objective="min-energy", quality_floor=floor,
+                             primary="farm"),
+            )
+            futs = []
+            t0 = time.perf_counter()
+            for i, inst in enumerate(fjobs):
+                d = router.decide([(inst.n, 8)], steps=steps,
+                                  iterations=iterations)
+                futs.append(backends[d.backend].submit(
+                    inst, jax.random.fold_in(jax.random.key(7), i),
+                    reads=8, steps=steps, reduce="best",
+                ))
+            backends["farm"].drain()
+            joules = 0.0
+            for fut in futs:
+                fut.result(timeout=120.0)
+                joules += fut.receipt().energy_joules
+            dt = time.perf_counter() - t0
+            decisions = router.stats()["decisions"]
+            for be in backends.values():
+                be.close()
+            label = "loose" if floor is None else f"tier{fi}"
+            shares = ",".join(
+                f"{k}:{v}" for k, v in sorted(decisions.items()) if v
+            )
+            _emit(
+                results,
+                f"farm_throughput_qualityfloor_{label}_{len(fjobs)}req",
+                dt / len(fjobs) * 1e6,
+                f"floor={'none' if floor is None else f'{floor:.3e}'}"
+                f";decisions={shares}"
+                f";joules_per_req={joules / len(fjobs):.3e}"
+                f";gap_farm={gaps.get('farm', 0.0):.3e}"
+                f";gap_mcmc={gaps.get('mcmc', 0.0):.3e}",
+                joules_per_req=joules / len(fjobs),
+            )
+
     # Heavy-tailed mix straight against the farm: best-fit-decreasing packing
     # + replica tiers, fused drains.  Each request contributes the engine's
     # ``iterations`` stochastic-rounding anneal jobs, so one drain packs
@@ -469,12 +569,13 @@ if __name__ == "__main__":
                     help="also serve the mix through a self-draining farm "
                          "with this drain policy (no caller-side drain)")
     ap.add_argument("--route", action="store_true",
-                    help="also run the routed saturation scenario "
-                         "(admission-only vs cost-model router + spill); "
-                         "requires --policy")
+                    help="run the quality-floor routing frontier, and (with "
+                         "--policy) the routed saturation scenario "
+                         "(admission-only vs cost-model router + spill)")
     ap.add_argument("--profile", default=None,
-                    help="calibration profile JSON for --route (default: "
-                         "the checked-in CALIBRATION_cobi_pool.json)")
+                    help="calibration profile JSON for --route (defaults: "
+                         "CALIBRATION_cobi_pool.json for saturation, "
+                         "CALIBRATION_mcmc.json for the floor frontier)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(tiny=args.tiny, json_path=args.json, policy=args.policy,

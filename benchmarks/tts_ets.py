@@ -1,10 +1,15 @@
-"""Paper Table I + Figs. 7-8: TTS and ETS for COBI / brute-force / Tabu.
+"""Paper Table I + Figs. 7-8: TTS and ETS for COBI / MCMC / brute / Tabu.
 
 Methodology exactly as Sec. V: per-benchmark first-success iteration at
 normalized objective >= 0.9, MLE geometric success probability (Eq. 14),
 TTS at p_target = 0.95 (Eq. 15) with per-iteration hardware costs, ETS from
 solver + host-eval power (Eq. 16).  Hardware constants from the paper:
-COBI 200us/solve @25mW, Tabu 25ms @20W, eval 18.9us @20W.
+COBI 200us/solve @25mW, Tabu 25ms @20W, eval 18.9us @20W.  The MCMC row is
+the Snowball-class CMOS Metropolis annealer (``solvers/mcmc.py``; 50us
+@15mW): cheaper per anneal than the oscillator chip but with its own,
+measured success probability -- the frontier therefore shows THREE solver
+families, and the gap between the mcmc and cobi rows is exactly what the
+serving router's ``quality_floor`` trades against energy.
 
 The same methodology feeds the serving router's calibration artifact
 (``repro.serving.calibration.calibrate_profile``): the MLE success
@@ -25,7 +30,7 @@ import jax
 import numpy as np
 
 from repro.core import SolveConfig, solve_es
-from repro.core.hardware import COBI, TABU_CPU, brute_hardware
+from repro.core.hardware import COBI, MCMC_CMOS, TABU_CPU, brute_hardware
 from repro.core.metrics import (
     ets_joules,
     first_success_iteration,
@@ -65,6 +70,9 @@ def run(n_benchmarks: int = 5, iters: int = 20, sizes=(20, 50)):
         for name, kw, hw in (
             ("cobi", dict(solver="cobi", int_range=14, rounding="stochastic",
                           reads=8, steps=300, decompose=decompose, p=20, q=10), COBI),
+            ("mcmc", dict(solver="mcmc", int_range=14, rounding="stochastic",
+                          reads=8, steps=400, decompose=decompose, p=20, q=10),
+             MCMC_CMOS),
             ("tabu", dict(solver="tabu", int_range=14, rounding="stochastic",
                           reads=8, decompose=decompose, p=20, q=10), TABU_CPU),
         ):
@@ -90,5 +98,20 @@ def run(n_benchmarks: int = 5, iters: int = 20, sizes=(20, 50)):
             f"tts_vs_brute={rows['brute'][0] / t_c:.2f}x;"
             f"tts_vs_tabu={rows['tabu'][0] / t_c:.2f}x;"
             f"ets_vs_brute_orders={np.log10(max(rows['brute'][1] / e_c, 1e-12)):.2f};"
-            f"ets_vs_tabu_orders={np.log10(max(rows['tabu'][1] / e_c, 1e-12)):.2f}",
+            f"ets_vs_tabu_orders={np.log10(max(rows['tabu'][1] / e_c, 1e-12)):.2f};"
+            f"ets_mcmc_vs_cobi={rows['mcmc'][1] / e_c:.3f}x;"
+            f"p_mcmc_minus_cobi={rows['mcmc'][2] - rows['cobi'][2]:+.3f}",
         )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sweep for CI smoke runs (noisy statistics)")
+    args = ap.parse_args()
+    if args.tiny:
+        run(n_benchmarks=2, iters=6, sizes=(12,))
+    else:
+        run()

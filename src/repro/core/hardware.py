@@ -32,6 +32,18 @@ COBI = SolverHardware(
     host_power_w=20.0,
 )
 
+# Snowball-class CMOS MCMC annealer (PAPERS.md): asynchronous Metropolis
+# updates in SRAM-adjacent logic.  Faster and lower-power per anneal than the
+# oscillator chip but stochastic-search quality (no phase dynamics), so it
+# trades solution quality for energy -- the point of quality-aware routing.
+MCMC_CMOS = SolverHardware(
+    name="mcmc",
+    seconds_per_solve=50e-6,
+    solver_power_w=15e-3,
+    host_eval_seconds=18.9e-6,
+    host_power_w=20.0,
+)
+
 TABU_CPU = SolverHardware(
     name="tabu",
     seconds_per_solve=25e-3,

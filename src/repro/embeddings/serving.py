@@ -27,16 +27,23 @@ stage whose drains run concurrently with Ising drains:
     first open-loop burst hits compiled code, exactly like the farm's.
 
 ``encode(texts)`` is the synchronous face (submit + wait), making a stage
-usable anywhere a plain encoder is accepted.
+usable anywhere a plain encoder is accepted.  ``submit_query(text)`` is the
+cached face: rerank traffic re-asks the same query against many candidate
+sets, so the stage keeps a small text-hash-keyed LRU of SOLO query
+embeddings (solo because the causal packing above makes a combined-encode
+query row depend on its batch-mates), invalidated when ``params`` is
+swapped; hit/miss counters surface through ``cache_stats()`` and the
+engine's ``stats()["encoder_cache"]``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,6 +60,11 @@ from repro.solvers.base import AwaitableFuture
 BATCH_BUCKET = 4
 SEG_BUCKET = 8
 MIN_LEN_BUCKET = 64
+
+# Query-embedding LRU capacity: retrieval/rerank traffic re-asks the same
+# query against many candidate sets, so the solo query row is the one
+# embedding that is genuinely reusable across requests.
+QUERY_CACHE_SIZE = 256
 
 
 def _bucket(n: int, base: int) -> int:
@@ -165,6 +177,16 @@ class EncoderStage:
         # Wall-clock (t0, t1) of each launch -- intersect with the farm's
         # busy intervals to measure encode-vs-anneal overlap.
         self._busy: deque = deque(maxlen=4096)
+        # Query-embedding LRU (see submit_query): text-hash -> (1, d) row,
+        # valid only for the params object it was computed with.  The
+        # in-flight table coalesces concurrent same-query requests (one
+        # engine round submits a whole batch before any encode finishes).
+        self._query_cache: "OrderedDict[str, jnp.ndarray]" = OrderedDict()
+        self._query_inflight: Dict[str, "EncodeFuture"] = {}
+        self._query_cache_cap = QUERY_CACHE_SIZE
+        self._query_hits = 0
+        self._query_misses = 0
+        self._params_token = id(params)
 
     @classmethod
     def tiny(cls, seed: int = 0, **kwargs) -> "EncoderStage":
@@ -218,6 +240,106 @@ class EncoderStage:
         """Synchronous face: submit + wait.  Makes a stage usable anywhere
         a plain ``encoder.encode(texts)`` is accepted."""
         return self.submit(texts).result()
+
+    def submit_query(self, text: str, *, tag: Optional[int] = None
+                     ) -> EncodeFuture:
+        """Cached solo encode of one query string; same future surface as
+        :meth:`submit`.
+
+        The query is always encoded ALONE: the backbone is causal and
+        :meth:`submit` packs a job's texts into one token row, so a query
+        row from a combined encode depends on whatever items preceded it --
+        uncacheable across requests.  A standalone query embedding is a
+        pure function of (text, params), so it lives in a small LRU keyed
+        by the text hash; a params swap invalidates the whole cache.  A hit
+        resolves immediately with a zero-cost receipt and is bit-identical
+        to the miss that populated it (same tensor).  Concurrent requests
+        for the SAME query coalesce onto one in-flight encode (the engine
+        submits a whole batch round before any encode finishes)."""
+        key = hashlib.blake2b(text.encode("utf-8"),
+                              digest_size=16).hexdigest()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("encoder stage is closed")
+            if id(self.params) != self._params_token:
+                # Params swap: everything cached or racing was computed
+                # with the old weights -- drop it all.
+                self._query_cache.clear()
+                self._query_inflight.clear()
+                self._params_token = id(self.params)
+            token = self._params_token
+            cached = self._query_cache.get(key)
+            inflight = None if cached is not None \
+                else self._query_inflight.get(key)
+            if cached is not None or inflight is not None:
+                if cached is not None:
+                    self._query_cache.move_to_end(key)
+                self._query_hits += 1
+                self._job_counter += 1
+                job_id = self._job_counter
+            else:
+                self._query_misses += 1
+        if cached is not None:
+            fut = EncodeFuture(job_id)
+            fut._receipt = EncodeReceipt(
+                job_id, tag, 0.0, 0, int(np.asarray(cached).nbytes), 0, 0,
+                self.sim_now(),
+            )
+            fut._finish(cached, None)
+            return fut
+        if inflight is not None:
+            # Piggyback on the racing encode: own job id + zero-cost
+            # receipt (the first submitter's receipt bills the launch).
+            fut = EncodeFuture(job_id)
+
+            def _chain(f: EncodeFuture, fut: EncodeFuture = fut,
+                       tag: Optional[int] = tag) -> None:
+                err = f.exception(0.0)
+                emb = None if err is not None else f.result(0.0)
+                nbytes = 0 if emb is None else int(np.asarray(emb).nbytes)
+                fut._receipt = EncodeReceipt(fut.job_id, tag, 0.0, 0,
+                                             nbytes, 0, 0, self.sim_now())
+                fut._finish(emb, err)
+
+            inflight.add_done_callback(_chain)
+            return fut
+        fut = self.submit([text], tag=tag)
+        with self._lock:
+            self._query_inflight[key] = fut
+
+        def _fill(f: EncodeFuture, key: str = key, token: int = token
+                  ) -> None:
+            with self._lock:
+                if self._query_inflight.get(key) is f:
+                    del self._query_inflight[key]
+                stale = self._params_token != token \
+                    or id(self.params) != token
+            try:
+                emb = f.result(0.0)
+            except Exception:  # noqa: BLE001 -- failed encodes aren't cached
+                return
+            if stale:
+                return
+            with self._lock:
+                self._query_cache[key] = emb
+                self._query_cache.move_to_end(key)
+                while len(self._query_cache) > self._query_cache_cap:
+                    self._query_cache.popitem(last=False)
+
+        fut.add_done_callback(_fill)
+        return fut
+
+    def cache_stats(self) -> dict:
+        """Query-LRU counters (the engine surfaces these in ``stats()``)."""
+        with self._lock:
+            hits, misses = self._query_hits, self._query_misses
+            return {
+                "hits": hits,
+                "misses": misses,
+                "size": len(self._query_cache),
+                "capacity": self._query_cache_cap,
+                "hit_rate": hits / max(hits + misses, 1),
+            }
 
     def flush_hint(self) -> None:
         """Non-blocking nudge: the current burst is over, drain what's

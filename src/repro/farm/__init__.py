@@ -64,6 +64,7 @@ from repro.farm.health import (  # noqa: F401
     ChipBreaker,
     FarmHealth,
 )
+from repro.farm.mcmc_backend import McmcPoolBackend  # noqa: F401
 from repro.farm.packing import (  # noqa: F401
     PackedInstance,
     PackEstimate,

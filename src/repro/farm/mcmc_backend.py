@@ -1,0 +1,95 @@
+"""MCMC annealer bank: the ``SolverBackend`` serving surface for the CMOS
+Metropolis machine (solvers/mcmc.py).
+
+A :class:`McmcPoolBackend` is the farm-shaped wrapper around the MCMC solver
+family: self-draining submit -> future -> receipt like
+:class:`~repro.solvers.base.ThreadPoolBackend` (each worker thread stands in
+for one annealer unit's control processor), but
+
+* jobs solve with the fused on-device best-of epilogue when the caller asks
+  for ``reduce="best"`` -- the replica reduction happens inside the kernel
+  launch (kernels/mcmc_dynamics.py), bit-identical to host ``np.argmin``;
+* receipts bill the simulated CMOS-annealer hardware model
+  (:data:`repro.core.hardware.MCMC_CMOS`: 50 us / 15 mW per read, distinct
+  from COBI's 200 us / 25 mW) as ``chip_seconds`` / ``energy_joules``, plus
+  the per-job program/readout transfer bytes -- NOT measured host watts, so
+  mixed cobi-farm / mcmc / host-pool serving accounts all three hardware
+  families through one receipt stream.
+
+``capacity_hint()`` / ``drain()`` / ``sim_now()`` are inherited: the bank's
+serving clock is host wall time (the simulation executes the anneal), while
+the billed chip time is the hardware model's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.hardware import MCMC_CMOS, SolverHardware
+from repro.solvers.base import PoolReceipt, SolverResult, ThreadPoolBackend
+
+__all__ = ["McmcPoolBackend"]
+
+
+class McmcPoolBackend(ThreadPoolBackend):
+    """Bank of simulated CMOS MCMC annealer units behind a job queue.
+
+    ``workers`` is the number of annealer units that run concurrently
+    (``capacity_hint().parallelism``); ``mode``/``sweeps`` knobs forward to
+    every solve (Snowball-style dual-mode selection).  ``hardware`` is the
+    per-read cost model billed on receipts.
+    """
+
+    def __init__(
+        self,
+        *,
+        workers: int = 4,
+        hardware: SolverHardware = MCMC_CMOS,
+        mode: str = "sweep",
+        sweeps: Optional[int] = None,
+    ):
+        super().__init__(
+            "mcmc", workers=workers, host_power_w=hardware.host_power_w
+        )
+        self.hardware = hardware
+        self.mode = mode
+        self.sweeps = sweeps
+
+    def _solve_job(self, ising, key, *, reads, steps, check, reduce,
+                   **solve_kwargs) -> SolverResult:
+        """Solve with the backend's mode knobs; ``reduce`` passes THROUGH to
+        the solver so ``"best"`` takes the fused on-device epilogue (the
+        registry conformance suite pins it bit-identical to host
+        ``reduced()``)."""
+        solve_kwargs.setdefault("mode", self.mode)
+        if self.sweeps is not None:
+            solve_kwargs.setdefault("sweeps", self.sweeps)
+        return self._fn(ising, key, reads=reads, steps=steps,
+                        check=bool(check), reduce=reduce, **solve_kwargs)
+
+    def _make_receipt(self, job_id, tag, *, ising, reads, wall, submitted,
+                      done) -> PoolReceipt:
+        """Bill the annealer hardware model: ``reads`` sequential anneals at
+        ``seconds_per_solve`` each, plus the J/h program upload and the
+        winning-read readout.  ``host_seconds`` stays 0 -- the measured wall
+        time is simulation cost, not modeled hardware time."""
+        del wall
+        n = int(ising.n)
+        chip_seconds = reads * self.hardware.seconds_per_solve
+        return PoolReceipt(
+            job_id, tag,
+            chip_seconds=chip_seconds,
+            energy_joules=chip_seconds * self.hardware.solver_power_w,
+            bytes_h2d=(n * n + n) * 4,
+            bytes_d2h=(n + 1) * 4,
+            sim_latency_seconds=done - submitted,
+            sim_completed=done,
+        )
+
+    def stats(self) -> dict:
+        hint = self.capacity_hint()
+        return dataclasses.asdict(hint) | {
+            "hardware": self.hardware.name,
+            "mode": self.mode,
+        }

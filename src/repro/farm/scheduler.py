@@ -765,6 +765,18 @@ class CobiFarm:
                 return self.n_chips
             return self.health.available_chips(self._sim_time)
 
+    def fault_rate(self) -> float:
+        """Observed per-job fault probability: the mean of the breaker
+        bank's per-chip fault EWMAs (0.0 without health tracking).  The
+        router folds this into the farm's cost model as an expected-retry
+        latency multiplier, so a farm that is fast-but-flaky loses routing
+        decisions to a clean backend on EFFECTIVE latency."""
+        with self._lock:
+            if self.health is None or not self.health.breakers:
+                return 0.0
+            bank = self.health.breakers
+            return float(sum(b.ewma for b in bank) / len(bank))
+
     def pending_jobs(self) -> int:
         with self._lock:
             return len(self._pending)

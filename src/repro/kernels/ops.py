@@ -28,6 +28,11 @@ from repro.kernels.cobi_dynamics import (
     cobi_trajectory_pallas,
 )
 from repro.kernels.ising_energy import ising_energy_batched_pallas, ising_energy_pallas
+from repro.kernels.mcmc_dynamics import (
+    DEFAULT_CHUNK,
+    mcmc_fused_best_batched_pallas,
+    mcmc_sweep_batched_pallas,
+)
 
 SLOT_PAD = 8  # slot axis of the fused readout is padded to this multiple
 
@@ -335,6 +340,103 @@ def cobi_anneal_packed_best(
         )
         best_e, best_s = e_out[:, :, 0], s_out
     return best_e[:, :s_slots], best_s[:, :s_slots, :n].astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "replicas", "sweeps", "chunk", "mode", "impl", "replica_block",
+        "reduce",
+    ),
+)
+def mcmc_anneal(
+    h: Array,
+    j: Array,
+    key: Array,
+    *,
+    replicas: int = 8,
+    sweeps: int = 50,
+    chunk: int = DEFAULT_CHUNK,
+    mode: str = "sweep",
+    t_hi: Array | float | None = None,
+    t_lo: float = 0.05,
+    impl: str = "auto",
+    replica_block: int = 256,
+    reduce: str = "none",
+) -> Tuple[Array, Array]:
+    """Asynchronous Metropolis sweeps over ``replicas`` independent chains.
+
+    The MCMC solver family's public entry (see kernels/mcmc_dynamics.py):
+    geometric per-sweep temperature ladder, dual-mode proposals
+    (``mode="sweep"`` in-order chunk sweeps / ``"random"`` uniform picks),
+    counter-based randomness from ``key``.  Unlike the oscillator kernels
+    there is no dynamics pre-scale -- Metropolis is invariant to none and
+    the ORIGINAL couplings both drive proposals and score energies, so one
+    VMEM-resident J serves the whole anneal.
+
+    ``reduce="none"`` returns each replica's best-visited state
+    (spins (R, N) int8, energies (R,) f32); ``"best"`` fuses the first-argmin
+    replica reduction into the launch (spins (N,) int8, energy () f32),
+    bit-identical to ``"none"`` + host ``np.argmin``.  On CPU, ``impl="auto"``
+    runs the jit'd oracle (bit-identical by construction; interpret-mode
+    Pallas pays per-grid-point overhead) -- ``impl="pallas"`` forces the
+    kernel, which any (replica_block, chunk) decomposition leaves bitwise
+    unchanged.
+    """
+    n = h.shape[-1]
+    if t_hi is None:
+        t_hi = kref.mcmc_t_hi(j)  # unpadded: padding reassociates row sums
+    t_hi = jnp.asarray(t_hi, jnp.float32)
+
+    n_pad = _pad_to(max(n, LANE), LANE)
+    r_block = min(replica_block, _pad_to(replicas, 8))
+    r_pad = _pad_to(replicas, r_block)
+    jp = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(
+        jnp.asarray(j, jnp.float32)
+    )
+    hp = jnp.zeros((1, n_pad), jnp.float32).at[0, :n].set(
+        jnp.asarray(h, jnp.float32)
+    )
+
+    if impl == "ref" or (impl == "auto" and _on_cpu()):
+        best_s, best_e = kref.ref_mcmc_sweep(
+            jp, hp[0], key, replicas=r_pad, sweeps=sweeps, mode=mode,
+            t_hi=t_hi, t_lo=t_lo, n_real=n,
+        )
+        spins = best_s[:replicas, :n].astype(jnp.int8)
+        energies = best_e[:replicas]
+    else:
+        seeds = kref.mcmc_seeds(key)
+        s0 = kref.mcmc_init_spins(seeds[0], r_pad, n_pad)
+        seeds_arr = jnp.zeros((1, 1, LANE), jnp.uint32).at[0, 0, :4].set(seeds)
+        params = (
+            jnp.zeros((1, 1, LANE), jnp.float32)
+            .at[0, 0, 0].set(t_hi)
+            .at[0, 0, 1].set(jnp.float32(t_lo))
+            .at[0, 0, 2].set(jnp.float32(n))
+            .at[0, 0, 3].set(jnp.float32(replicas))
+        )
+        if reduce == "best":
+            e_out, s_out = mcmc_fused_best_batched_pallas(
+                jp[None], hp[None], s0[None], seeds_arr, params,
+                sweeps=sweeps, chunk=chunk, mode=mode,
+                replica_block=r_block, interpret=_on_cpu(),
+            )
+            return s_out[0, 0, :n].astype(jnp.int8), e_out[0, 0, 0]
+        e_out, s_out = mcmc_sweep_batched_pallas(
+            jp[None], hp[None], s0[None], seeds_arr, params,
+            sweeps=sweeps, chunk=chunk, mode=mode,
+            replica_block=r_block, interpret=_on_cpu(),
+        )
+        spins = s_out[0, :replicas, :n].astype(jnp.int8)
+        energies = e_out[0, :replicas, 0]
+
+    if reduce == "best":
+        i = jnp.argmin(energies)  # first minimum on ties, as np.argmin
+        return spins[i], energies[i]
+    if reduce != "none":
+        raise ValueError(f"unknown reduce mode {reduce!r}")
+    return spins, energies
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "replica_block"))

@@ -108,6 +108,160 @@ def ref_cobi_fused_best(
 
 
 # ---------------------------------------------------------------------------
+# MCMC asynchronous Metropolis sweeps (counter-based randomness)
+# ---------------------------------------------------------------------------
+
+# Odd 32-bit constants decorrelating the (replica, sweep, proposal) counter
+# axes before the avalanche mix.  Shared verbatim by the Pallas kernel
+# (kernels/mcmc_dynamics.py): the randomness is a pure function of LOGICAL
+# indices, never of how the grid or the chunk loop decomposes them, which is
+# what makes the kernel bit-identical to this oracle at any decomposition.
+MCMC_CTR_REP = 0x9E3779B1
+MCMC_CTR_SWEEP = 0x85EBCA77
+MCMC_CTR_POS = 0xC2B2AE3D
+
+
+def mcmc_mix32(x: Array) -> Array:
+    """lowbias32-style avalanche on uint32 (wrapping multiply is exact XLA
+    semantics on every backend, so kernel and oracle agree bitwise)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def mcmc_u01(seed: Array, rep: Array, sweep: Array, pos: Array) -> Array:
+    """Uniform [0, 1) as a pure function of (seed, replica, sweep, proposal).
+
+    Counter-based (no carried RNG state): every (replica, sweep, proposal)
+    triple hashes independently, so any loop order / grid split that visits
+    the same logical triples draws the same numbers.  24 mantissa bits.
+    """
+    x = (
+        jnp.asarray(seed, jnp.uint32)
+        + jnp.asarray(rep, jnp.uint32) * jnp.uint32(MCMC_CTR_REP)
+        + jnp.asarray(sweep, jnp.uint32) * jnp.uint32(MCMC_CTR_SWEEP)
+        + jnp.asarray(pos, jnp.uint32) * jnp.uint32(MCMC_CTR_POS)
+    )
+    bits = mcmc_mix32(x) >> jnp.uint32(8)
+    return bits.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def mcmc_seeds(key: Array) -> Array:
+    """(4,) uint32 seed words derived from a ``jax.random`` key: [init,
+    pick, accept, spare].  The only place the key is consumed -- everything
+    downstream is counter-based."""
+    return jax.random.bits(key, (4,), jnp.uint32)
+
+
+def mcmc_init_spins(seed_init: Array, replicas: int, n: int) -> Array:
+    """(R, N) f32 +-1 initial spins from counters (sweep axis pinned to 0)."""
+    rep = jnp.arange(replicas, dtype=jnp.uint32)[:, None]
+    pos = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    u = mcmc_u01(seed_init, rep, jnp.uint32(0), pos)
+    return jnp.where(u < 0.5, 1.0, -1.0).astype(jnp.float32)
+
+
+def mcmc_t_hi(j: Array) -> Array:
+    """Default hot temperature 2*max_i sum_j |J_ij| + eps (f32), matching the
+    SA baseline's choice.  Compute on the UNPADDED couplings: zero-padding
+    can reassociate the row sums and perturb the last mantissa bit."""
+    return 2.0 * jnp.abs(jnp.asarray(j, jnp.float32)).sum(-1).max() + jnp.float32(1e-6)
+
+
+def ref_mcmc_sweep(
+    j: Array,  # (N, N) symmetric couplings (f32 or int; zero diag)
+    h: Array,  # (N,) local fields
+    key: Array,  # jax.random key -> 3 counter seeds via mcmc_seeds
+    *,
+    replicas: int,
+    sweeps: int,
+    mode: str = "sweep",  # "sweep" (in-order chunk sweep) | "random" proposals
+    t_hi: Array | float | None = None,
+    t_lo: float = 0.05,
+    n_real: int | None = None,  # live positions (rest are padding no-ops)
+) -> tuple[Array, Array]:
+    """Asynchronous single-spin Metropolis sweeps; the MCMC kernel oracle.
+
+    R replicas anneal independently down a geometric per-sweep temperature
+    ladder T(t) = t_hi * (t_lo/t_hi)^(t/(sweeps-1)).  Each sweep makes one
+    proposal per position: ``mode="sweep"`` updates spins strictly in order
+    0..n-1 (every replica proposes the same position -- the Snowball-style
+    sequential chunk sweep); ``mode="random"`` draws each replica's position
+    uniformly from [0, n_real) (asynchronous uniform proposals).  The local
+    field f = s @ J is maintained by rank-1 updates, so a proposal costs
+    O(R*N); acceptance is the standard Metropolis rule on
+    dE = -2 s_k (h_k + 2 f_k).  Proposals at positions >= n_real are exact
+    no-ops (flip factor 0.0), so a padded call matches an unpadded one on
+    the live lanes.  Returns (best spins (R, N) f32 +-1, best energies (R,)
+    f32) -- the best state each replica VISITED, as in the SA baseline.
+    """
+    if mode not in ("sweep", "random"):
+        raise ValueError(f"unknown mcmc mode {mode!r}")
+    j = jnp.asarray(j, jnp.float32)
+    n = j.shape[-1]
+    hrow = jnp.asarray(h, jnp.float32).reshape(1, n)
+    if t_hi is None:
+        t_hi = mcmc_t_hi(j)
+    t_hi = jnp.asarray(t_hi, jnp.float32)
+    t_lo = jnp.asarray(t_lo, jnp.float32)
+    n_live = jnp.float32(n if n_real is None else n_real)
+    seeds = mcmc_seeds(key)
+    rep = jnp.arange(replicas, dtype=jnp.uint32)[:, None]
+    lanes = jnp.arange(n, dtype=jnp.float32)[None, :]
+    s0 = mcmc_init_spins(seeds[0], replicas, n)
+    f0 = jnp.dot(s0, j, preferred_element_type=jnp.float32)
+    e0 = jnp.sum(s0 * hrow + s0 * f0, axis=1, keepdims=True)
+    ratio = t_lo / t_hi
+    denom = jnp.float32(max(sweeps - 1, 1))
+
+    def sweep_body(ts, carry):
+        temp = t_hi * ratio ** (ts.astype(jnp.float32) / denom)
+        ts_u = ts.astype(jnp.uint32)
+
+        def t_body(t, carry):
+            s, f, e, best_e, best_s = carry
+            tf = t.astype(jnp.float32)
+            u_acc = mcmc_u01(seeds[2], rep, ts_u, t.astype(jnp.uint32))
+            if mode == "random":
+                u_pick = mcmc_u01(seeds[1], rep, ts_u, t.astype(jnp.uint32))
+                k = jnp.floor(u_pick * n_live)  # (R, 1)
+                onehot = (lanes == k).astype(jnp.float32)  # (R, N)
+            else:
+                onehot = (lanes == tf).astype(jnp.float32)  # (1, N)
+            s_k = jnp.sum(s * onehot, axis=1, keepdims=True)
+            f_k = jnp.sum(f * onehot, axis=1, keepdims=True)
+            h_k = jnp.sum(hrow * onehot, axis=1, keepdims=True)
+            j_k = jnp.dot(onehot, j, preferred_element_type=jnp.float32)
+            de = -2.0 * s_k * (h_k + 2.0 * f_k)
+            accept = u_acc < jnp.exp(
+                jnp.minimum(-de / jnp.maximum(temp, 1e-9), 0.0)
+            )
+            flip = jnp.where(accept & (tf < n_live), 1.0, 0.0)
+            s_new = s * (1.0 - 2.0 * onehot * flip)
+            f_new = f - 2.0 * (s_k * flip) * j_k
+            e_new = e + de * flip
+            better = e_new < best_e
+            return (
+                s_new,
+                f_new,
+                e_new,
+                jnp.where(better, e_new, best_e),
+                jnp.where(better, s_new, best_s),
+            )
+
+        return jax.lax.fori_loop(0, n, t_body, carry)
+
+    _, _, _, best_e, best_s = jax.lax.fori_loop(
+        0, sweeps, sweep_body, (s0, f0, e0, e0, s0)
+    )
+    return best_s, best_e[:, 0]
+
+
+# ---------------------------------------------------------------------------
 # Batched Ising energy
 # ---------------------------------------------------------------------------
 

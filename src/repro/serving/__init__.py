@@ -19,6 +19,7 @@ from repro.serving.calibration import (  # noqa: F401
     calibrate_profile,
     default_profile,
     fit_host_latency,
+    mcmc_model,
 )
 from repro.serving.engine import (  # noqa: F401
     RequestCancelled,

@@ -29,13 +29,14 @@ Artifact schema (``PROFILE_SCHEMA``)::
       "meta": {...},                      # free-form fit provenance
       "models": {
         "<backend name>": {
-          "name": str, "kind": "farm"|"host", "solver": str,
-          "seconds_per_solve": float,     # farm: one chip anneal
+          "name": str, "kind": "farm"|"host"|"annealer", "solver": str,
+          "seconds_per_solve": float,     # farm/annealer: one chip anneal
           "power_w": float,               # chip / host watts
           "lanes_per_chip": int, "parallelism": int,
           "lat_coef": [c0, c1, c2],       # host s/invocation = c0+c1*n+c2*n^2
           "reads_ref": int, "steps_ref": int, "steps_scale": bool,
           "quality_n": [...], "quality_p": [...],   # Eq. 14 p(n) knots
+          "fault_rate": float,            # expected per-job fault probability
           "ewma_latency": float, "ewma_energy": float
         }, ...
       }
@@ -77,12 +78,22 @@ class BackendCostModel:
     wall seconds are a fitted quadratic in instance size n (scaled linearly
     by reads and, when ``steps_scale``, by anneal steps), request latency is
     the pool's critical path over ``parallelism`` workers, energy is host
-    watts x total worker seconds.  ``ewma_latency`` / ``ewma_energy`` are
-    multiplicative online corrections (1.0 = trust the fit).
+    watts x total worker seconds.  ``kind="annealer"`` models a bank of
+    single-instance annealer units (the MCMC CMOS machine): per-invocation
+    cost is the hardware constant ``reads x seconds_per_solve`` like the
+    farm, but there is no lane packing -- request latency is the host-style
+    critical path over ``parallelism`` units and energy is the full chip
+    power (one instance owns the whole array).  ``fault_rate`` is the
+    expected per-job fault probability (profile prior, refreshed online by
+    the router from the backend's breaker bank): latency predictions are
+    inflated by the expected geometric retry count ``1 / (1 - fault_rate)``,
+    so a flaky-but-fast backend competes on its EFFECTIVE latency.
+    ``ewma_latency`` / ``ewma_energy`` are multiplicative online corrections
+    (1.0 = trust the fit).
     """
 
     name: str
-    kind: str  # "farm" | "host"
+    kind: str  # "farm" | "host" | "annealer"
     solver: str = "cobi"
     seconds_per_solve: float = 0.0
     power_w: float = 0.0
@@ -94,12 +105,15 @@ class BackendCostModel:
     steps_scale: bool = True
     quality_n: Tuple[int, ...] = ()
     quality_p: Tuple[float, ...] = ()  # per-iteration success prob at each n
+    fault_rate: float = 0.0
     ewma_latency: float = 1.0
     ewma_energy: float = 1.0
 
     def __post_init__(self):
-        if self.kind not in ("farm", "host"):
-            raise ValueError(f"kind must be 'farm' or 'host', got {self.kind!r}")
+        if self.kind not in ("farm", "host", "annealer"):
+            raise ValueError(
+                f"kind must be 'farm', 'host' or 'annealer', got {self.kind!r}"
+            )
         if len(self.quality_n) != len(self.quality_p):
             raise ValueError("quality_n and quality_p must pair up")
 
@@ -108,10 +122,11 @@ class BackendCostModel:
     def invocation_seconds(self, n: int, reads: int, steps: int) -> float:
         """Raw (uncorrected) seconds for ONE solver invocation of ``reads``
         anneals on an ``n``-spin instance."""
-        if self.kind == "farm":
+        if self.kind in ("farm", "annealer"):
             # The simulated chip executes its programmed array once per
-            # read; anneal steps shape the kernel, not the 200us hardware
-            # model, exactly like the scheduler's bin-seconds accounting.
+            # read; anneal steps shape the kernel, not the 200us (farm) /
+            # 50us (annealer) hardware model, exactly like the scheduler's
+            # bin-seconds accounting.
             return reads * self.seconds_per_solve
         c0, c1, c2 = self.lat_coef
         per = c0 + c1 * n + c2 * n * n
@@ -122,17 +137,26 @@ class BackendCostModel:
 
     def invocation_energy(self, n: int, reads: int, steps: int) -> float:
         """Raw joules billed to one invocation (farm: lane share of its
-        bin's chip energy; host: watts x worker seconds)."""
+        bin's chip energy; annealer/host: watts x chip/worker seconds)."""
         sec = self.invocation_seconds(n, reads, steps)
         if self.kind == "farm":
             share = min(max(n, 1) / max(self.lanes_per_chip, 1), 1.0)
             return sec * self.power_w * share
         return sec * self.power_w
 
+    def retry_factor(self) -> float:
+        """Expected attempts per job under the model's fault rate: geometric
+        ``1 / (1 - fault_rate)``, clamped so even a pathological rate keeps
+        the prediction finite (10x at ``fault_rate >= 0.9``)."""
+        rate = min(max(self.fault_rate, 0.0), 0.9)
+        return 1.0 / (1.0 - rate)
+
     def request_seconds(self, jobs: Sequence[Tuple[int, int]], steps: int
                         ) -> float:
         """Corrected latency for one request's ``(n, reads)`` solve jobs,
-        as if the request drained alone (queue wait is the router's job)."""
+        as if the request drained alone (queue wait is the router's job).
+        Inflated by :meth:`retry_factor`: faulted jobs re-run, so a flaky
+        backend's effective latency grows with its observed fault rate."""
         if not jobs:
             return 0.0
         if self.kind == "farm":
@@ -146,12 +170,12 @@ class BackendCostModel:
                                        self.lanes_per_chip)
                 cycles = math.ceil(est.n_bins / max(self.parallelism, 1))
                 total += cycles * tier_reads * self.seconds_per_solve
-            return total * self.ewma_latency
+            return total * self.retry_factor() * self.ewma_latency
         per = [self.invocation_seconds(n, r, steps) for n, r in jobs]
         # Critical path over the pool: ideal work-sharing, never better
         # than the single longest invocation.
         lat = max(max(per), sum(per) / max(self.parallelism, 1))
-        return lat * self.ewma_latency
+        return lat * self.retry_factor() * self.ewma_latency
 
     def request_energy(self, jobs: Sequence[Tuple[int, int]], steps: int
                        ) -> float:
@@ -284,6 +308,26 @@ def fit_host_latency(samples: Sequence[Tuple[int, float]]
     return tuple(out)  # type: ignore[return-value]
 
 
+def mcmc_model(*, workers: int = 4,
+               quality_n: Sequence[int] = (),
+               quality_p: Sequence[float] = ()) -> BackendCostModel:
+    """Cost model for the MCMC annealer bank (``McmcPoolBackend``): the
+    Snowball-class hardware constants are exact by construction, like the
+    farm's; only the quality knots need fitting (Metropolis search quality
+    differs from the oscillator dynamics -- that gap is what quality-aware
+    routing trades against the 4x latency / ~2x power edge)."""
+    from repro.core.hardware import MCMC_CMOS
+
+    return BackendCostModel(
+        name="mcmc", kind="annealer", solver="mcmc",
+        seconds_per_solve=MCMC_CMOS.seconds_per_solve,
+        power_w=MCMC_CMOS.solver_power_w,
+        parallelism=max(workers, 1),
+        quality_n=tuple(int(n) for n in quality_n),
+        quality_p=tuple(float(p) for p in quality_p),
+    )
+
+
 def default_profile(
     *,
     n_chips: int = 4,
@@ -292,14 +336,16 @@ def default_profile(
     pool_solver: str = "cobi",
     host_invocation_seconds: float = 10e-3,
     host_power_w: float = 20.0,
+    mcmc_workers: int = 0,
 ) -> CalibrationProfile:
     """Uncalibrated starting profile from the paper's hardware constants.
 
     The farm model is exact by construction (the 200us/25mW simulation IS
     the model); the host pool gets a deliberately conservative flat
     ``host_invocation_seconds`` that the EWMA correction and/or a real
-    ``benchmarks/calibrate.py`` fit tighten.  No quality knots: both
-    backends run the same solver by default, so routing never trades
+    ``benchmarks/calibrate.py`` fit tighten.  ``mcmc_workers > 0`` adds the
+    MCMC annealer-bank model (50us/15mW).  No quality knots: the backends
+    are treated as quality-equivalent by default, so routing never trades
     quality until a fitted profile says it may.
     """
     from repro.core.hardware import COBI
@@ -316,8 +362,11 @@ def default_profile(
         lat_coef=(host_invocation_seconds, 0.0, 0.0),
         steps_scale=pool_solver in ("cobi", "sa"),
     )
+    models = {"farm": farm, "pool": pool}
+    if mcmc_workers > 0:
+        models["mcmc"] = mcmc_model(workers=mcmc_workers)
     return CalibrationProfile(
-        {"farm": farm, "pool": pool},
+        models,
         meta={"source": "default_profile", "fitted": False},
     )
 
@@ -333,6 +382,8 @@ def calibrate_profile(
     lanes_per_chip: int = 64,
     pool_workers: int = 4,
     pool_solver: str = "cobi",
+    mcmc_workers: int = 0,
+    mcmc_quality_derate: float = 0.85,
     seed0: int = 6000,
 ) -> CalibrationProfile:
     """Fit a profile with the TTS/ETS methodology of ``benchmarks/tts_ets.py``.
@@ -342,8 +393,18 @@ def calibrate_profile(
     invocation (the pool latency samples) and (b) the first-success
     iteration at the 0.9-normalized threshold, whose MLE geometric success
     probability (Eq. 14) becomes the quality knot p(n).  Farm latency/energy
-    need no fitting -- the simulated hardware constants are exact -- but the
-    farm model shares the quality knots (same solver, same physics).
+    need no fitting -- the simulated hardware constants are exact -- and the
+    farm's quality knots always come from a COBI sweep (shared with the pool
+    only when the pool runs the same solver).  ``mcmc_workers > 0`` adds the
+    MCMC annealer-bank model with ITS OWN quality knots (a sweep with
+    ``solver="mcmc"``): latency and energy are the Snowball-class hardware
+    constants, but search quality must be measured.  The measured mcmc p(n)
+    is multiplied by ``mcmc_quality_derate``: the bit-exact synchronous
+    Metropolis simulation is an UPPER BOUND on the asynchronous hardware it
+    stands in for (shared RNG lanes, racing asynchronous updates, reduced
+    precision all cost success probability on the physical chip), so the
+    checked-in model derates it -- that derated gap is what a router
+    ``quality_floor`` genuinely trades against the annealer's energy edge.
     """
     import time
 
@@ -358,27 +419,32 @@ def calibrate_profile(
     )
     from repro.data.synthetic import benchmark_suite
 
-    lat_samples: List[Tuple[int, float]] = []
-    quality_n: List[int] = []
-    quality_p: List[float] = []
-    for n in sizes:
-        m = max(2, min(6, n // 3))
-        suite = benchmark_suite(n_benchmarks, n, m, lam=0.5)
-        bounds = [reference_bounds(x) for x in suite]
-        cfg = SolveConfig(
-            solver=pool_solver, formulation="improved", iterations=iterations,
-            reads=reads, steps=steps, int_range=14, rounding="stochastic",
-        )
-        firsts, walls = [], []
-        for i, (p, b) in enumerate(zip(suite, bounds)):
-            t0 = time.perf_counter()
-            rep = solve_es(p, jax.random.key(seed0 + i), cfg)
-            walls.append((time.perf_counter() - t0) / iterations)
-            curve = normalized_objective(rep.curve, b)
-            firsts.append(first_success_iteration(curve, 0.9))
-        lat_samples.append((n, float(np.median(walls))))
-        quality_n.append(int(n))
-        quality_p.append(float(success_probability(firsts)))
+    def sweep(solver: str) -> Tuple[List[Tuple[int, float]], List[int],
+                                    List[float]]:
+        lat_samples: List[Tuple[int, float]] = []
+        quality_n: List[int] = []
+        quality_p: List[float] = []
+        for n in sizes:
+            m = max(2, min(6, n // 3))
+            suite = benchmark_suite(n_benchmarks, n, m, lam=0.5)
+            bounds = [reference_bounds(x) for x in suite]
+            cfg = SolveConfig(
+                solver=solver, formulation="improved", iterations=iterations,
+                reads=reads, steps=steps, int_range=14, rounding="stochastic",
+            )
+            firsts, walls = [], []
+            for i, (p, b) in enumerate(zip(suite, bounds)):
+                t0 = time.perf_counter()
+                rep = solve_es(p, jax.random.key(seed0 + i), cfg)
+                walls.append((time.perf_counter() - t0) / iterations)
+                curve = normalized_objective(rep.curve, b)
+                firsts.append(first_success_iteration(curve, 0.9))
+            lat_samples.append((n, float(np.median(walls))))
+            quality_n.append(int(n))
+            quality_p.append(float(success_probability(firsts)))
+        return lat_samples, quality_n, quality_p
+
+    lat_samples, quality_n, quality_p = sweep(pool_solver)
 
     prof = default_profile(
         n_chips=n_chips, lanes_per_chip=lanes_per_chip,
@@ -391,12 +457,27 @@ def calibrate_profile(
     pool.quality_n = tuple(quality_n)
     pool.quality_p = tuple(quality_p)
     farm = prof.models["farm"]
-    farm.quality_n = tuple(quality_n)
-    farm.quality_p = tuple(quality_p)
+    if pool_solver == "cobi":
+        farm.quality_n = tuple(quality_n)
+        farm.quality_p = tuple(quality_p)
+    else:
+        # The farm runs COBI regardless of what the pool runs: its quality
+        # knots need their own COBI sweep.
+        _, farm_n, farm_p = sweep("cobi")
+        farm.quality_n = tuple(farm_n)
+        farm.quality_p = tuple(farm_p)
+    if mcmc_workers > 0:
+        _, mc_n, mc_p = sweep("mcmc")
+        prof.models["mcmc"] = mcmc_model(
+            workers=mcmc_workers, quality_n=mc_n,
+            quality_p=[min(max(p * mcmc_quality_derate, 0.0), 1.0)
+                       for p in mc_p],
+        )
     prof.meta = {
         "source": "calibrate_profile", "fitted": True,
         "sizes": list(sizes), "n_benchmarks": n_benchmarks,
         "iterations": iterations, "reads": reads, "steps": steps,
-        "pool_solver": pool_solver,
+        "pool_solver": pool_solver, "mcmc_workers": mcmc_workers,
+        "mcmc_quality_derate": mcmc_quality_derate,
     }
     return prof

@@ -89,12 +89,12 @@ import jax
 import numpy as np
 
 from repro.core import SolveConfig
-from repro.core.hardware import COBI, TABU_CPU
+from repro.core.hardware import COBI, MCMC_CMOS, TABU_CPU
 from repro.core.metrics import normalized_objective, reference_bounds
 from repro.core.pipeline import iter_solve_es, solve_es
 from repro.data.text import split_sentences
 from repro.embeddings import HashedBowEncoder
-from repro.farm import CobiFarm
+from repro.farm import CobiFarm, McmcPoolBackend
 from repro.serving.admission import (
     AdmissionConfig,
     AdmissionController,
@@ -229,14 +229,19 @@ class SummarizationEngine:
         (``farm=`` injects a pre-built one; ``n_chips=0`` disables it -- legacy
         sequential per-request solving) and tabu/SA get a
         :class:`ThreadPoolBackend` with ``pool_workers`` threads
-        (``pool_workers=0`` disables it).  A non-manual ``policy`` makes the
+        (``pool_workers=0`` disables it; ``solver="mcmc"`` gets a
+        :class:`repro.farm.McmcPoolBackend` annealer bank instead so
+        receipts bill the CMOS-annealer hardware model).  A non-manual
+        ``policy`` makes the
         farm self-draining: the driver never calls ``drain()`` and futures
         resolve from the farm's background drive loop.  ``admission``
         configures the submit-side admission layer (default: admit
         everything).  ``routing=True`` (COBI farm backends only) adds a
         same-solver host thread pool and a :class:`BackendRouter` above
         admission: ``profile`` is a :class:`CalibrationProfile` (or a path to
-        a saved one; default: the uncalibrated hardware-constant profile),
+        a saved one; default: the uncalibrated hardware-constant profile --
+        a profile carrying an ``"mcmc"`` model additionally registers an
+        MCMC annealer bank as a third routable backend),
         ``route_objective`` picks min-energy / min-latency / weighted, and
         ``quality_floor`` caps the predicted quality gap a backend may incur.
         ``seed`` keys the continuous ``submit()`` path: request ``r``'s key
@@ -279,6 +284,10 @@ class SummarizationEngine:
             self.backend = backend
         elif farm is not None and self.cfg.solver == "cobi":
             self.backend = farm
+        elif self.cfg.solver == "mcmc" and pool_workers > 0:
+            # The MCMC solver family serves through its annealer bank so
+            # receipts bill the CMOS hardware model, not host watts.
+            self.backend = McmcPoolBackend(workers=pool_workers)
         elif self.cfg.solver in _POOL_SOLVERS and pool_workers > 0:
             self.backend = ThreadPoolBackend(self.cfg.solver,
                                              workers=pool_workers)
@@ -305,8 +314,16 @@ class SummarizationEngine:
                 self.cfg.solver, workers=max(pool_workers, 1),
                 host_power_w=profile.model("pool").power_w,
             )
+            backends = {"farm": self.farm, "pool": spill_pool}
+            if "mcmc" in profile.models:
+                # A profile carrying an mcmc model opts the engine into the
+                # third solver family: the annealer bank serves routed work
+                # whenever its fitted quality knots clear the quality floor.
+                backends["mcmc"] = McmcPoolBackend(
+                    workers=max(profile.model("mcmc").parallelism, 1),
+                )
             self.router = BackendRouter(
-                {"farm": self.farm, "pool": spill_pool}, profile,
+                backends, profile,
                 RouterConfig(objective=route_objective,
                              quality_floor=quality_floor, primary="farm"),
             )
@@ -334,7 +351,11 @@ class SummarizationEngine:
         self._closed = False
 
     def _hardware(self):
-        return COBI if self.cfg.solver == "cobi" else TABU_CPU
+        if self.cfg.solver == "cobi":
+            return COBI
+        if self.cfg.solver == "mcmc":
+            return MCMC_CMOS
+        return TABU_CPU
 
     # ------------------------------------------------------------------ API
 
@@ -756,18 +777,38 @@ class SummarizationEngine:
         if not texts:
             e = None
         elif self.stage is not None:
-            efut = self.stage.submit(texts, tag=req.request_id)
+            qfut = None
+            if req.kofn.relevance == "query" and len(texts) >= 2:
+                # Split the query (last row of encode_texts' output) into
+                # its own solo job: the stage's causal packing would
+                # entangle a combined query row with this request's items,
+                # while a solo row is a pure function of (text, params) and
+                # so cacheable across requests (submit_query's LRU).
+                qfut = self.stage.submit_query(texts[-1],
+                                               tag=req.request_id)
+                efut = self.stage.submit(texts[:-1], tag=req.request_id)
+            else:
+                efut = self.stage.submit(texts, tag=req.request_id)
             # Yield to the driver while the stage batches and runs the
             # encode: other requests' Ising rounds keep draining, so encode
             # of this request overlaps anneal of its neighbours.  The short
             # bounded wait keeps the manual-policy round loop from
             # hot-spinning without stalling it a full encode.
-            while not efut.wait(0.002):
+            while not efut.wait(0.002) or (qfut is not None
+                                           and not qfut.wait(0.002)):
                 yield
             e = efut.result()
             rcpt = efut.receipt()
             enc_seconds = rcpt.encoder_seconds
             enc_bytes = rcpt.bytes_h2d + rcpt.bytes_d2h
+            if qfut is not None:
+                # Re-append the query row LAST, preserving the
+                # ``problem_from_embeddings`` contract (query = e[-1]).
+                e = np.concatenate(
+                    [np.asarray(e), np.asarray(qfut.result())], axis=0)
+                qrcpt = qfut.receipt()
+                enc_seconds += qrcpt.encoder_seconds
+                enc_bytes += qrcpt.bytes_h2d + qrcpt.bytes_d2h
             enc_power = self.stage.power_w
         else:
             t_enc = time.perf_counter()

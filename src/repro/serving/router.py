@@ -145,6 +145,7 @@ class BackendRouter:
         candidates = []
         for name in names:
             model = self.profile.model(name)
+            self._refresh_fault_rate(name, model)
             gap = max(
                 (model.quality_gap(n, iterations) for n, _ in jobs),
                 default=0.0,
@@ -249,6 +250,22 @@ class BackendRouter:
         if cfg.objective == "min-latency":
             return seconds
         return cfg.latency_weight * seconds + cfg.energy_weight * joules
+
+    def _refresh_fault_rate(self, name: str,
+                            model: BackendCostModel) -> None:
+        """Overwrite the model's fault-rate prior with the live backend's
+        observed rate (``backend.fault_rate()`` -- the breaker bank's fault
+        EWMA on the farm).  The profile value is a fit-time prior; once the
+        backend reports its own health, routing scores its EFFECTIVE
+        latency (expected retries x clean latency), so a flaky-but-fast
+        backend loses to a clean one."""
+        live = getattr(self.backends[name], "fault_rate", None)
+        if live is None:
+            return
+        try:
+            model.fault_rate = min(max(float(live()), 0.0), 1.0)
+        except Exception:
+            pass  # an unhealthy hint must never fail routing
 
     def _queue_seconds(self, name: str, model: BackendCostModel,
                        queued: Optional[Dict[str, float]]) -> float:

@@ -1,4 +1,12 @@
-from repro.solvers import brute, cobi, greedy, random_baseline, sa, tabu  # noqa: F401
+from repro.solvers import (  # noqa: F401
+    brute,
+    cobi,
+    greedy,
+    mcmc,
+    random_baseline,
+    sa,
+    tabu,
+)
 from repro.solvers.base import (  # noqa: F401
     ISING_SOLVER_NAMES,
     PoolFuture,

@@ -6,7 +6,7 @@ returns a :class:`SolverResult` -- a batch of candidate spin configurations
 with their energies.  Two call surfaces build on that:
 
 * **Registry** -- :func:`ising_solver` maps a solver name (``"cobi"``,
-  ``"tabu"``, ``"sa"``, ``"brute"``) to a uniform callable
+  ``"tabu"``, ``"sa"``, ``"mcmc"``, ``"brute"``) to a uniform callable
   ``solve(ising, key, *, reads, steps, check, reduce) -> SolverResult``.
   The pipeline's per-iteration invoke goes through this table instead of
   per-solver ``if``/``elif`` branching; solvers that ignore a knob (tabu has
@@ -74,6 +74,7 @@ _ISING_SOLVERS = {
     "cobi": ("repro.solvers.cobi", "solve"),
     "tabu": ("repro.solvers.tabu", "solve_ising"),
     "sa": ("repro.solvers.sa", "solve_ising"),
+    "mcmc": ("repro.solvers.mcmc", "solve_ising"),
     "brute": ("repro.solvers.brute", "solve_ising"),
 }
 
@@ -404,8 +405,10 @@ class ThreadPoolBackend:
         def run():
             try:
                 t0 = time.perf_counter()
-                res = self._fn(ising, key, reads=reads, steps=steps,
-                               check=bool(check), reduce="none", **solve_kwargs)
+                res = self._solve_job(
+                    ising, key, reads=reads, steps=steps, check=check,
+                    reduce=reduce, **solve_kwargs,
+                )
                 wall = time.perf_counter() - t0
                 done = self.sim_now()
                 with self._lock:
@@ -413,14 +416,11 @@ class ThreadPoolBackend:
                         wall if self._avg_job_seconds == 0.0
                         else 0.8 * self._avg_job_seconds + 0.2 * wall
                     )
-                receipt = PoolReceipt(
-                    job_id, tag,
-                    host_seconds=wall,
-                    energy_joules=wall * self.host_power_w,
-                    sim_latency_seconds=done - submitted,
-                    sim_completed=done,
+                receipt = self._make_receipt(
+                    job_id, tag, ising=ising, reads=reads, wall=wall,
+                    submitted=submitted, done=done,
                 )
-                fut._finish(res.reduced(reduce), receipt)
+                fut._finish(res, receipt)
             except BaseException as exc:  # noqa: BLE001 -- fail the future
                 fut._finish(error=exc)
             finally:
@@ -430,6 +430,30 @@ class ThreadPoolBackend:
         # Cancelled jobs never reach run(); the done-callback retires them.
         fut.add_done_callback(lambda _f: self._job_finished(job_id))
         return fut
+
+    # Worker-side hooks subclasses override to change how a job solves or
+    # how it is billed (see repro.farm.mcmc_backend.McmcPoolBackend, which
+    # bills a simulated CMOS-annealer hardware model instead of measured
+    # host watts).
+
+    def _solve_job(self, ising, key, *, reads, steps, check, reduce,
+                   **solve_kwargs) -> SolverResult:
+        """Run one job on the worker thread; returns the reduced result."""
+        res = self._fn(ising, key, reads=reads, steps=steps,
+                       check=bool(check), reduce="none", **solve_kwargs)
+        return res.reduced(reduce)
+
+    def _make_receipt(self, job_id, tag, *, ising, reads, wall, submitted,
+                      done) -> PoolReceipt:
+        """Bill one completed job (measured wall time x host watts)."""
+        del ising, reads
+        return PoolReceipt(
+            job_id, tag,
+            host_seconds=wall,
+            energy_joules=wall * self.host_power_w,
+            sim_latency_seconds=done - submitted,
+            sim_completed=done,
+        )
 
     def drain(self) -> int:
         """Block until every in-flight job resolved; returns 0 (the pool

@@ -1,0 +1,85 @@
+"""MCMC solver: batched asynchronous-sweep Metropolis annealer.
+
+The second hardware-flavored solver family next to COBI: a Snowball-style
+dual-mode CMOS annealer (sequential chunk sweeps or uniform-random proposals,
+``mode=``) simulated bit-faithfully by the Pallas MCMC kernel
+(kernels/mcmc_dynamics.py).  Unlike the oscillator chip it accepts arbitrary
+float couplings -- no integer programming constraint, no dynamics rescale --
+occupying a genuinely different quality/speed/energy point on the solver
+frontier, which is what makes quality-aware routing meaningful.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.formulation import IsingProblem
+from repro.kernels import ops
+from repro.solvers.base import SolverResult
+
+Array = jax.Array
+
+# The pipeline's shared ``steps`` budget is denominated in oscillator Euler
+# steps; one asynchronous Metropolis sweep (N proposals with a rank-1 field
+# update each) costs roughly eight of those, so the registry entry converts
+# at this rate.  cfg.steps=400 -> 50 sweeps.
+STEPS_PER_SWEEP = 8
+
+
+def sweeps_for_steps(steps: int) -> int:
+    return max(1, int(steps) // STEPS_PER_SWEEP)
+
+
+def solve(
+    ising: IsingProblem,
+    key: Array,
+    *,
+    replicas: int = 8,
+    sweeps: int = 50,
+    chunk: int | None = None,
+    mode: str = "sweep",
+    t_hi: float | None = None,
+    t_lo: float = 0.05,
+    impl: str = "auto",
+    reduce: str = "none",
+) -> SolverResult:
+    """Run ``replicas`` independent Metropolis chains down the ladder.
+
+    ``reduce="none"`` returns every chain's best-visited state; ``"best"``
+    keeps only the argmin-energy chain via the fused on-device epilogue
+    (spins (1, N), energies (1,)), bit-identical to ``"none"`` + host
+    ``np.argmin``.  ``t_hi`` defaults to the SA baseline's 2*max_i sum|J_ij|,
+    computed on the unpadded couplings.
+    """
+    if t_hi is None:
+        t_hi = float(2.0 * np.abs(np.asarray(ising.j)).sum(-1).max() + 1e-6)
+    kwargs = {} if chunk is None else {"chunk": chunk}
+    spins, energies = ops.mcmc_anneal(
+        ising.h, ising.j, key,
+        replicas=replicas, sweeps=sweeps, mode=mode,
+        t_hi=np.float32(t_hi), t_lo=t_lo, impl=impl, reduce=reduce, **kwargs,
+    )
+    if reduce == "best":
+        spins, energies = spins[None], energies[None]
+    return SolverResult(spins=spins, energies=energies)
+
+
+def solve_ising(
+    ising: IsingProblem,
+    key: Array,
+    *,
+    reads: int = 8,
+    steps: int = 400,
+    check: bool = False,
+    reduce: str = "none",
+    **kwargs,
+) -> SolverResult:
+    """Uniform registry entry point (see ``repro.solvers.base.ising_solver``):
+    ``reads`` maps to replicas, ``steps`` to sweeps at
+    :data:`STEPS_PER_SWEEP`; ``check`` has no MCMC meaning (any float
+    instance is programmable) and is ignored; extra kwargs (``sweeps``,
+    ``mode``, ``chunk``, ``t_hi``, ``t_lo``, ``impl``) pass through."""
+    del check
+    kwargs.setdefault("sweeps", sweeps_for_steps(steps))
+    return solve(ising, key, replicas=reads, reduce=reduce, **kwargs)

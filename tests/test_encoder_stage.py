@@ -172,3 +172,60 @@ def test_engine_stats_expose_stage():
     assert stats["encoder_stage"]["jobs"] >= 1
     assert stats["encoder_stage"]["busy_seconds"] > 0.0
     assert stats["admission"]["admitted"] == 1
+
+
+# ------------------------------------------------- query-embedding cache
+
+
+def test_query_cache_hit_is_bit_identical_and_invalidated_on_params_swap():
+    """submit_query: a hit returns the SAME embedding at zero metered cost,
+    concurrent same-query submissions coalesce onto one encode, and a
+    params swap invalidates everything cached."""
+    stage = EncoderStage.tiny()
+    q = "which sentence answers the question?"
+    e1 = stage.submit_query(q).result(timeout=120)
+    f2 = stage.submit_query(q, tag=9)
+    e2 = f2.result(timeout=120)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    r2 = f2.receipt()
+    assert r2.encoder_seconds == 0.0 and r2.batch_jobs == 0 and r2.tag == 9
+    assert stage.cache_stats() == {
+        "hits": 1, "misses": 1, "size": 1, "capacity": 256, "hit_rate": 0.5,
+    }
+    # In-flight coalescing: the second submission lands before the first
+    # resolves, still counts as a hit, still bit-identical.
+    fa = stage.submit_query("a brand new query")
+    fb = stage.submit_query("a brand new query")
+    np.testing.assert_array_equal(np.asarray(fa.result(timeout=120)),
+                                  np.asarray(fb.result(timeout=120)))
+    st = stage.cache_stats()
+    assert st["hits"] == 2 and st["misses"] == 2 and st["size"] == 2
+    # A params swap (same values, new object) drops the cache: the rows
+    # were computed under the old weights object.
+    stage.params = jax.tree_util.tree_map(lambda x: x, stage.params)
+    e3 = stage.submit_query(q).result(timeout=120)
+    st = stage.cache_stats()
+    assert st["misses"] == 3 and st["hits"] == 2 and st["size"] == 1
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e3))
+    stage.close()
+
+
+def test_engine_query_relevance_uses_cache_and_reports_hit_rate():
+    """Two rerank requests against the same query but different candidate
+    sets share ONE query encode; the hit rate surfaces in engine stats."""
+    from repro.serving.api import KofnSpec
+
+    stage = EncoderStage.tiny()
+    with SummarizationEngine(CFG, n_chips=2, encoder=stage) as eng:
+        q = "what changed in the budget vote?"
+        futs = [
+            eng.submit(items=synthetic_document(21 + i, 6),
+                       kofn=KofnSpec(m=2, relevance="query", query=q))
+            for i in range(2)
+        ]
+        for f in futs:
+            assert len(f.result(timeout=300.0).selected) == 2
+        stats = eng.stats()
+    cache = stats["encoder_cache"]
+    assert cache["hits"] == 1 and cache["misses"] == 1
+    assert cache["hit_rate"] == pytest.approx(0.5)

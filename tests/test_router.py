@@ -332,3 +332,121 @@ def test_evict_lowest_priority_makes_room():
     assert f_mid.result(timeout=120.0).summary
     assert f_high.result(timeout=120.0).summary
     eng.close()
+
+
+# --------------------------------------- fault-rate-aware effective latency
+
+
+def _quantized(seed, n):
+    p = synthetic_benchmark(seed, n, max(2, n // 4), lam=0.5)
+    return quantize_ising(improved_ising(p), "deterministic",
+                          int_range=14).ising
+
+
+def test_fault_rate_inflates_predicted_latency():
+    """The geometric retry factor scales request_seconds for every model
+    kind, clamped at 10x for pathological rates."""
+    prof = default_profile(n_chips=2, pool_workers=2, mcmc_workers=2)
+    jobs = [(30, 8)]
+    for name in ("farm", "pool", "mcmc"):
+        m = prof.model(name)
+        base = m.request_seconds(jobs, 100)
+        m.fault_rate = 0.5
+        assert m.request_seconds(jobs, 100) == pytest.approx(2.0 * base)
+        m.fault_rate = 0.99  # clamp: never predicts more than 10 attempts
+        assert m.request_seconds(jobs, 100) == pytest.approx(10.0 * base)
+        m.fault_rate = 0.0
+
+
+def test_flaky_fast_farm_loses_min_latency_route():
+    """A farm whose breaker bank reports a high live fault rate loses the
+    min-latency decision to a slower-but-clean pool: the router folds
+    ``backend.fault_rate()`` into the model before scoring, so the flaky
+    backend competes on retry-inflated EFFECTIVE latency."""
+    from repro.farm import FaultPlan
+    from repro.farm.health import BreakerConfig
+
+    prof = default_profile(n_chips=2, pool_workers=4,
+                           host_invocation_seconds=3e-3)
+    prof.models["pool"].steps_scale = False
+    jobs = [(30, 8)]
+    # Base predictions: farm 8 reads x 200us = 1.6ms < pool 3ms flat.
+    assert prof.model("farm").request_seconds(jobs, 100) < \
+        prof.model("pool").request_seconds(jobs, 100)
+    pool = ThreadPoolBackend("cobi", workers=2)
+
+    # Clean farm: min-latency keeps the work on the chips.
+    farm = CobiFarm(2)
+    router = BackendRouter({"farm": farm, "pool": pool}, prof,
+                           RouterConfig(objective="min-latency",
+                                        primary="farm"))
+    d = router.decide(jobs, steps=100,
+                      queued_seconds={"farm": 0.0, "pool": 0.0})
+    assert d.backend == "farm"
+    assert prof.model("farm").fault_rate == 0.0  # live refresh saw no faults
+    farm.close()
+
+    # Every chip dead: drains fail, the breaker EWMAs saturate, and the
+    # SAME profile now routes away from the farm.
+    flaky = CobiFarm(
+        2, faults=FaultPlan(seed=3, failed_chips=(0, 1)),
+        health=BreakerConfig(consecutive_failures=100, ewma_alpha=0.5,
+                             min_events=2, cooldown=1e6, cooldown_max=1e6),
+    )
+    for round_ in range(4):
+        futs = [flaky.submit(_quantized(10 * round_ + i, 30),
+                             jax.random.fold_in(jax.random.key(round_), i),
+                             reads=4, steps=80) for i in range(2)]
+        flaky.drain()
+        for fut in futs:
+            try:
+                fut.result()
+            except Exception:  # noqa: BLE001 -- dead chips fail jobs
+                pass
+    assert flaky.fault_rate() > 0.5
+    router = BackendRouter({"farm": flaky, "pool": pool}, prof,
+                           RouterConfig(objective="min-latency",
+                                        primary="farm"))
+    d = router.decide(jobs, steps=100,
+                      queued_seconds={"farm": 0.0, "pool": 0.0})
+    assert d.backend == "pool"
+    assert prof.model("farm").fault_rate > 0.5  # refreshed from the breakers
+    assert prof.model("farm").request_seconds(jobs, 100) > \
+        prof.model("pool").request_seconds(jobs, 100)
+    flaky.close()
+    pool.close()
+
+
+# --------------------------------- quality-floor routing across families
+
+
+def _rigged_family_profile():
+    """Profile where the MCMC bank is the energy winner but a quality
+    liability: farm/pool p=0.9 per iteration, mcmc p=0.45.  At
+    iterations=2 the gaps are 0.01 vs 0.3025 -- a floor between them
+    flips the min-energy decision."""
+    import dataclasses as dc
+
+    prof = default_profile(n_chips=2, pool_workers=2, mcmc_workers=2)
+    good = dict(quality_n=(8, 64), quality_p=(0.9, 0.9))
+    prof.models["farm"] = dc.replace(prof.models["farm"], **good)
+    prof.models["pool"] = dc.replace(prof.models["pool"], **good)
+    prof.models["mcmc"] = dc.replace(prof.models["mcmc"],
+                                     quality_n=(8, 64),
+                                     quality_p=(0.45, 0.45))
+    return prof
+
+
+@pytest.mark.parametrize("floor,expect", [(None, "mcmc"), (0.2, "farm")])
+def test_routed_engine_selects_family_by_quality_floor(floor, expect):
+    """End-to-end acceptance: under min-energy the routed engine sends
+    work to the MCMC annealer bank when any quality is acceptable, and the
+    quality floor vetoes it back onto the COBI farm."""
+    eng = SummarizationEngine(
+        CFG, n_chips=2, routing=True, route_objective="min-energy",
+        profile=_rigged_family_profile(), quality_floor=floor,
+    )
+    with eng:
+        resp = eng.submit(DOCS[0], m=5).result(timeout=300.0)
+    assert resp.backend_used == expect
+    assert resp.summary  # the veto changes WHERE, never WHETHER, it serves
