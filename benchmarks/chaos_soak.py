@@ -38,8 +38,6 @@ import argparse
 import json
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 
 # Sentence counts per synthetic doc; >=59 would decompose -- kept at chip
@@ -96,6 +94,7 @@ def _serve_once(cfg, docs, plan, retry, n_chips):
     fstats = eng.farm.stats()
     rstats = eng.router.stats()
     adm_depth = eng.admission.depth()
+    obs_checks = _check_observability(eng, len(docs), outcomes)
     eng.close()
     return {
         "outcomes": outcomes,
@@ -105,10 +104,79 @@ def _serve_once(cfg, docs, plan, retry, n_chips):
         "quarantined": list(fstats.quarantined),
         "failovers": rstats["failovers"],
         "signature": [_outcome_signature(s, x) for s, x in outcomes],
+        **obs_checks,
     }
 
 
-def _scenario(results, name, cfg, docs, plan, retry, n_chips, oracle):
+def _check_observability(eng, n_docs, outcomes):
+    """Span-tree and meter-conservation acceptance for one serving run.
+
+    * every request -- including ``RequestFailed`` terminals -- must carry a
+      CLOSED root ``request`` span and zero orphan spans (a span in the
+      request's trace whose parent is missing);
+    * farm.job span meters, copied verbatim from receipts, must sum to the
+      registry's receipt-fed histograms bit-for-bit (same values folded in
+      the same order -- any divergence means a meter was dropped or
+      double-billed);
+    * every ``RequestFailed`` must arrive with a non-empty flight-recorder
+      dump that includes the request's terminal root span record.
+    """
+    tracer = eng.obs.tracer
+    recs = tracer.records()
+    snap = eng.obs.registry.snapshot()
+    roots = {r["trace"]: r["id"] for r in recs
+             if r["kind"] == "span" and r["name"] == "request"}
+    missing_roots = sum(1 for rid in range(1, n_docs + 1)
+                        if rid not in roots)
+    orphan_spans = sum(
+        1 for r in recs
+        if r["kind"] == "span" and r["trace"] in roots
+        and r["parent"] is None and r["id"] != roots[r["trace"]]
+    )
+    span_chip_s = sum(r["attrs"]["chip_seconds"] for r in recs
+                      if r["kind"] == "span" and r["name"] == "farm.job")
+    span_joules = sum(r["attrs"]["energy_joules"] for r in recs
+                      if r["kind"] == "span" and r["name"] == "farm.job")
+    n_pool_spans = sum(1 for r in recs
+                       if r["kind"] == "span" and r["name"] == "pool.job")
+
+    def _hist_sum(name):
+        fam = snap.get(name, {"series": []})
+        return sum(s["sum"] for s in fam["series"])
+
+    def _counter(name):
+        fam = snap.get(name, {"series": []})
+        return sum(s["value"] for s in fam["series"])
+
+    meter_mismatches = 0
+    if span_chip_s != _hist_sum("farm_job_chip_seconds"):
+        meter_mismatches += 1
+    if span_joules != _hist_sum("farm_job_energy_joules"):
+        meter_mismatches += 1
+    if n_pool_spans != int(_counter("pool_jobs_total")):
+        meter_mismatches += 1
+
+    flight_missing = 0
+    flight_logs = {}
+    for status, x in outcomes:
+        if status != "ok":
+            log = getattr(x, "flight_log", ())
+            flight_logs[x.request_id] = list(log)
+            terminal = any(r.get("name") == "request"
+                           and not r.get("open") for r in log)
+            if not log or not terminal:
+                flight_missing += 1
+    return {
+        "unclosed_spans": tracer.unclosed_spans(),
+        "orphan_spans": orphan_spans + missing_roots,
+        "meter_mismatches": meter_mismatches,
+        "flight_missing": flight_missing,
+        "flight_logs": flight_logs,
+    }
+
+
+def _scenario(results, name, cfg, docs, plan, retry, n_chips, oracle,
+              flight_artifacts):
     """Run (twice, for the determinism gate), verify, and emit one scenario."""
     run1 = _serve_once(cfg, docs, plan, retry, n_chips)
     if plan is not None:
@@ -141,7 +209,10 @@ def _scenario(results, name, cfg, docs, plan, retry, n_chips, oracle):
         f"goodput_rps={goodput:.2f};ok={len(ok)}/{len(docs)};"
         f"retries={retries};failovers={run1['failovers']};"
         f"repaired={repaired};quarantined={len(run1['quarantined'])};"
-        f"stranded={run1['stranded']};escapes={corrupt_escapes}"
+        f"stranded={run1['stranded']};escapes={corrupt_escapes};"
+        f"unclosed_spans={run1['unclosed_spans']};"
+        f"orphan_spans={run1['orphan_spans']};"
+        f"meter_mismatches={run1['meter_mismatches']}"
     )
     _emit(
         results, name, us, derived,
@@ -156,7 +227,12 @@ def _scenario(results, name, cfg, docs, plan, retry, n_chips, oracle):
         quarantined=len(run1["quarantined"]),
         stranded_futures=run1["stranded"],
         corrupt_escapes=corrupt_escapes,
+        unclosed_spans=run1["unclosed_spans"],
+        orphan_spans=run1["orphan_spans"],
+        meter_mismatches=run1["meter_mismatches"],
+        flight_missing=run1["flight_missing"],
     )
+    flight_artifacts[name] = run1["flight_logs"]
     return ok
 
 
@@ -176,6 +252,7 @@ def run(tiny: bool = False, json_path: str | None = None) -> dict:
     n_chips = 4
     retry = RetryPolicy(max_retries=3)
     results: dict = {}
+    flight_artifacts: dict = {}
 
     # Warmup: compile the solve kernels (shape-bucketed by the full mix's
     # packing) so scenario wall times compare serving work, not jit time.
@@ -184,7 +261,7 @@ def run(tiny: bool = False, json_path: str | None = None) -> dict:
     # Fault-free oracle (also the goodput baseline the chaos rows compare
     # against in the emitted CSV).
     oracle = _scenario(results, "chaos_baseline", cfg, docs, None, retry,
-                       n_chips, None)
+                       n_chips, None, flight_artifacts)
     if len(oracle) != len(docs):
         raise RuntimeError("fault-free baseline must serve every request")
 
@@ -192,25 +269,38 @@ def run(tiny: bool = False, json_path: str | None = None) -> dict:
     drain_plan = FaultPlan(seed=20, drain_timeout_rate=0.10,
                            failed_chips=(1, 3))
     _scenario(results, "chaos_drain_faults", cfg, docs, drain_plan, retry,
-              n_chips, oracle)
+              n_chips, oracle, flight_artifacts)
 
     # Readout corruption: repairable bit-flips, stuck lanes, corrupt tail.
     readout_plan = FaultPlan(seed=21, bitflip_rate=0.15, corrupt_rate=0.05,
                              stuck_lane_rate=0.01)
     _scenario(results, "chaos_readout_faults", cfg, docs, readout_plan,
-              retry, n_chips, oracle)
+              retry, n_chips, oracle, flight_artifacts)
 
     total_stranded = sum(r["stranded_futures"] for r in results.values())
     total_escapes = sum(r["corrupt_escapes"] for r in results.values())
-    if total_stranded or total_escapes:
+    total_unclosed = sum(r["unclosed_spans"] for r in results.values())
+    total_orphans = sum(r["orphan_spans"] for r in results.values())
+    total_mismatch = sum(r["meter_mismatches"] for r in results.values())
+    total_noflight = sum(r["flight_missing"] for r in results.values())
+    if (total_stranded or total_escapes or total_unclosed or total_orphans
+            or total_mismatch or total_noflight):
         raise RuntimeError(
             f"robustness acceptance violated: stranded_futures="
-            f"{total_stranded}, corrupt_escapes={total_escapes} (must be 0)"
+            f"{total_stranded}, corrupt_escapes={total_escapes}, "
+            f"unclosed_spans={total_unclosed}, orphan_spans={total_orphans}, "
+            f"meter_mismatches={total_mismatch}, "
+            f"flight_missing={total_noflight} (all must be 0)"
         )
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
+        flight_path = json_path.replace(".json", "") + "_flight.json"
+        with open(flight_path, "w") as f:
+            json.dump(flight_artifacts, f, indent=2, sort_keys=True,
+                      default=str)
+        print(f"# wrote {flight_path}")
     return results
 
 

@@ -33,13 +33,14 @@ import sys
 
 # Metrics gated per scenario (when the baseline scenario carries them).
 TRACKED = ("rps", "occupancy", "bytes_per_req", "p50_ms", "p95_ms",
-           "rps_vs_lockstep", "joules_per_req", "overlap_fraction",
-           "encoder_joules_per_req")
+           "rps_vs_lockstep", "rps_vs_untraced", "joules_per_req",
+           "overlap_fraction", "encoder_joules_per_req")
 
 # Invariant metrics that must be EXACTLY zero whenever the baseline scenario
-# reports them: a single stranded future or corrupt-readout escape is a
-# correctness bug, not a perf regression, so there is no tolerance band.
-ZERO_METRICS = ("stranded_futures", "corrupt_escapes")
+# reports them: a single stranded future, corrupt-readout escape, or span
+# opened-but-never-closed is a correctness bug, not a perf regression, so
+# there is no tolerance band.
+ZERO_METRICS = ("stranded_futures", "corrupt_escapes", "unclosed_spans")
 
 
 def _check_scenario(name: str, brec: dict, nrec: dict, tolerance: float,

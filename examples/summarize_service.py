@@ -122,15 +122,45 @@ def run_open_loop(engine, args):
     for resp in responses:
         _print_response(resp)
     met = [r.deadline_met for r in responses if r.deadline_met is not None]
-    stats = engine.admission.stats()
+
+    # The open-loop report reads the unified metrics registry -- the same
+    # counters Prometheus would scrape -- rather than per-component stats
+    # dicts (which are themselves views over this registry).
+    snap = engine.metrics_snapshot()
+
+    def _value(name, **labels):
+        fam = snap.get(name)
+        if fam is None:
+            return 0.0
+        total = 0.0
+        for s in fam["series"]:
+            if all(s["labels"].get(k) == v for k, v in labels.items()):
+                total += s.get("value", s.get("count", 0.0))
+        return total
+
+    degraded = int(_value("admission_degraded_total"))
+    spilled = int(_value("admission_spilled_total"))
+    peak_depth = int(_value("admission_peak_depth"))
     print(
         f"\nGoodput {len(responses) / wall:.1f} rps | offered "
         f"{n / wall:.1f} rps | shed {rejected}/{n} "
-        f"({100 * rejected / max(n, 1):.0f}%) | degraded {stats.degraded} | "
-        f"peak queue depth {stats.peak_depth}"
+        f"({100 * rejected / max(n, 1):.0f}%) | degraded {degraded} | "
+        f"peak queue depth {peak_depth}"
         + (f" | deadlines met {sum(met)}/{len(met)}" if met else "")
-        + (f" | spilled {stats.spilled}" if stats.spilled else "")
+        + (f" | spilled {spilled}" if spilled else "")
     )
+    obs = engine.stats()["obs"]
+    lat = snap.get("farm_job_sim_latency_seconds")
+    lat_line = ""
+    if lat is not None and lat["series"]:
+        cnt = sum(s["count"] for s in lat["series"])
+        if cnt:
+            tot = sum(s["sum"] for s in lat["series"])
+            lat_line = (f" | farm job sim latency mean "
+                        f"{tot / cnt * 1e3:.3f} ms over {cnt} jobs")
+    print(f"Registry: tracing={obs['tracing']} "
+          f"unclosed_spans={obs['unclosed_spans']} "
+          f"dropped_events={obs['dropped_events']}" + lat_line)
     if engine.router is not None:
         print(f"Router: {engine.router.stats()} | "
               f"admission errors: {engine.admission.estimate_errors()}")

@@ -14,7 +14,7 @@ driver interleaves many requests' rounds, and futures reduce back into a
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +66,24 @@ class SolveConfig:
     speculate_depth: int = 2
 
 
+@dataclasses.dataclass(frozen=True)
+class WindowRecord:
+    """Per-submission-unit routing attribution (one per routed window, or
+    one for the whole request on the direct path).
+
+    ``realized_seconds`` is the window's receipt-metered hardware time
+    (chip + host) and ``realized_energy`` its receipt joules, so the
+    router's calibration EWMA can be updated PER WINDOW -- a spilled
+    window updates the pool's profile even when the request as a whole was
+    ticketed for the farm."""
+
+    backend: Optional[str]
+    predicted_seconds: float
+    realized_seconds: float
+    realized_energy: float
+    jobs: int
+
+
 @dataclasses.dataclass
 class SolveReport:
     selection: np.ndarray  # (N,) {0,1}
@@ -90,6 +108,11 @@ class SolveReport:
     # Routed solves: solve jobs per backend name ({} when no route hook ran).
     # A decomposed request's windows may split across backends.
     backend_jobs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Routed solves: one WindowRecord per reduced submission unit ([] when
+    # no route hook ran).  Mis-speculated pipelined windows that never
+    # reduced contribute to the meters above but get no record -- their
+    # realized time has no per-window prediction to calibrate against.
+    windows: List[WindowRecord] = dataclasses.field(default_factory=list)
     # Readout-level fault events absorbed by completed jobs (repaired
     # bit-flips, stuck lanes) -- counted from receipt fault tags.  Terminal
     # faults (retried/failed-over jobs) are counted by the recovery context,
@@ -469,12 +492,17 @@ def _iter_iterations(
 
 
 # Per-window backend picker for routed serving: ``route(n, reads) ->
-# (backend_name, backend, deadline)``.  The deadline comes back from the
-# route because backends keep independent clocks (the farm's simulated
-# clock vs a pool's wall clock): whoever converts the request deadline must
-# know which backend won.  ``backend_name`` lands in
+# (backend_name, backend, deadline, predicted_seconds)``.  The deadline
+# comes back from the route because backends keep independent clocks (the
+# farm's simulated clock vs a pool's wall clock): whoever converts the
+# request deadline must know which backend won.  ``predicted_seconds`` is
+# the route's latency prediction for THIS window; it lands (with the
+# realized receipts) in ``SolveReport.windows`` so calibration feedback is
+# per window, not per request.  ``backend_name`` lands in
 # ``SolveReport.backend_jobs``; ``None`` disables tagging.
-RouteFn = Callable[[int, int], Tuple[Optional[str], object, Optional[float]]]
+RouteFn = Callable[
+    [int, int], Tuple[Optional[str], object, Optional[float], float]
+]
 
 
 def iter_solve_es(
@@ -533,18 +561,25 @@ def iter_solve_es(
             problem, key, cfg, backend, priority, deadline, tag, route,
             recovery
         ))
-    name = None
+    name, predicted = None, 0.0
     if route is not None:
-        name, backend, deadline = route(problem.n, cfg.reads)
+        name, backend, deadline, predicted = route(problem.n, cfg.reads)
     best_x, best_obj, curve, acct = yield from _iter_iterations(
         problem, key, cfg, backend, priority, deadline, tag, recovery
     )
     acct.tally(name, cfg.iterations)
+    windows = []
+    if route is not None:
+        windows.append(WindowRecord(
+            name, predicted, acct.chip_seconds + acct.host_seconds,
+            acct.energy_joules, cfg.iterations,
+        ))
     return SolveReport(
         best_x, best_obj, np.asarray(curve), cfg.iterations,
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
         acct.sim_completed, host_seconds=acct.host_seconds,
         backend_jobs=acct.backend_jobs, faults_seen=acct.faults_seen,
+        windows=windows,
     )
 
 
@@ -564,18 +599,25 @@ def _iter_decomposed_lockstep(
     sub_cfg = dataclasses.replace(cfg, decompose=False)
     steps = decomp.decompose_steps(problem, k_dec, p=cfg.p, q=cfg.q)
     acct = _Acct()
+    windows: List[WindowRecord] = []
     item = next(steps)
     while True:
         sub, m, k_sub = item
-        w_name, w_backend, w_deadline = None, backend, deadline
+        w_name, w_backend, w_deadline, w_pred = None, backend, deadline, 0.0
         if route is not None:
-            w_name, w_backend, w_deadline = route(sub.n, sub_cfg.reads)
+            w_name, w_backend, w_deadline, w_pred = route(sub.n, sub_cfg.reads)
         sel, _, _, sub_acct = yield from _iter_iterations(
             sub.with_m(m), k_sub, sub_cfg, w_backend, priority, w_deadline,
             tag, recovery
         )
         acct.add(sub_acct)
         acct.tally(w_name, sub_cfg.iterations)
+        if route is not None:
+            windows.append(WindowRecord(
+                w_name, w_pred,
+                sub_acct.chip_seconds + sub_acct.host_seconds,
+                sub_acct.energy_joules, sub_cfg.iterations,
+            ))
         try:
             item = steps.send(sel)
         except StopIteration as done:
@@ -589,6 +631,7 @@ def _iter_decomposed_lockstep(
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
         acct.sim_completed, host_seconds=acct.host_seconds,
         backend_jobs=acct.backend_jobs, faults_seen=acct.faults_seen,
+        windows=windows,
     )
 
 
@@ -620,9 +663,10 @@ def _iter_decomposed(
     plan = decomp.PipelinedDecomposition(
         problem, k_dec, p=cfg.p, q=cfg.q, speculate=cfg.speculate_windows
     )
-    inflight: dict = {}  # (seq, indices) -> (subproblem, futures)
+    inflight: dict = {}  # (seq, indices) -> (sub, round, name, predicted)
     windows_submitted = 0
     acct = _Acct()
+    windows: List[WindowRecord] = []
     consumed: set = set()
     while not plan.done():
         for spec in plan.pending_specs():
@@ -636,21 +680,25 @@ def _iter_decomposed(
             fkey = (spec.seq, spec.indices)
             if fkey not in inflight:
                 sub = problem.subproblem(np.asarray(spec.indices)).with_m(spec.m)
-                w_name, w_backend, w_deadline = None, backend, deadline
+                w_name, w_backend, w_deadline, w_pred = (
+                    None, backend, deadline, 0.0)
                 if route is not None:
-                    w_name, w_backend, w_deadline = route(sub.n, sub_cfg.reads)
+                    w_name, w_backend, w_deadline, w_pred = route(
+                        sub.n, sub_cfg.reads)
                 inflight[fkey] = (
                     sub,
                     _submit_iterations(
                         sub, spec.key, sub_cfg, w_backend, priority,
                         w_deadline, tag
                     ),
+                    w_name,
+                    w_pred,
                 )
                 acct.tally(w_name, sub_cfg.iterations)
                 windows_submitted += 1
         spec = plan.next_spec()
         fkey = (spec.seq, spec.indices)
-        sub, rnd = inflight[fkey]
+        sub, rnd, w_name, w_pred = inflight[fkey]
         if not all(f.done() for f in rnd.futures):
             yield rnd.futures
         if recovery is None:
@@ -659,6 +707,12 @@ def _iter_decomposed(
             sel, _, _, sub_acct = yield from _reduce_with_recovery(
                 sub, sub_cfg, rnd, recovery)
         acct.add(sub_acct)
+        if route is not None:
+            windows.append(WindowRecord(
+                w_name, w_pred,
+                sub_acct.chip_seconds + sub_acct.host_seconds,
+                sub_acct.energy_joules, sub_cfg.iterations,
+            ))
         consumed.add(fkey)
         plan.resolve(sel)
     # Mis-speculated windows that already annealed burned real chip time
@@ -667,7 +721,7 @@ def _iter_decomposed(
     # request's answer was available without them.  Still-queued orphans are
     # cancelled so they never pollute a later, unrelated drain's
     # packing/accounting; either way the job's buffers are released.
-    for fkey, (_, rnd) in inflight.items():
+    for fkey, (_, rnd, _, _) in inflight.items():
         if fkey in consumed:
             continue
         for fut in rnd.futures:
@@ -697,6 +751,7 @@ def _iter_decomposed(
         acct.chip_seconds, acct.energy_joules, acct.bytes_h2d, acct.bytes_d2h,
         acct.sim_completed, host_seconds=acct.host_seconds,
         backend_jobs=acct.backend_jobs, faults_seen=acct.faults_seen,
+        windows=windows,
     )
 
 

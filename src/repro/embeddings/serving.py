@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import embed_sentences
+from repro.obs import Observability
 from repro.solvers.base import AwaitableFuture
 
 # Power-of-two padding bases (the farm's BATCH_BUCKET/REPLICA_BUCKET idiom):
@@ -123,6 +124,10 @@ class _EncodeJob:
     n_tokens: int  # real (non-PAD) token count, for share attribution
     future: EncodeFuture
     tag: Optional[int]
+    # Workload label ("selection", "multidoc", ...): keys the per-workload
+    # sec/token estimate -- multidoc items are systematically longer, so one
+    # global EWMA under-charges them at admission.
+    workload: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -149,7 +154,7 @@ class EncoderStage:
 
     def __init__(self, cfg, params, *, max_len: int = 1024,
                  power_w: float = 45.0, linger: float = 0.0,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None, obs=None):
         """``cfg``/``params`` are the backbone config + weights
         (:func:`EncoderStage.tiny` builds the CPU-smoke pair).  ``power_w``
         prices encoder seconds into joules on receipts; ``linger`` is an
@@ -172,8 +177,9 @@ class EncoderStage:
         self._closed = False
         self._flush = False
         self._job_counter = 0
-        self._stats = EncoderStats()
-        self._ewma_spt = 0.0  # EWMA seconds per real token
+        self._ewma_spt = 0.0  # global EWMA seconds per real token (fallback)
+        self.obs = None
+        self.attach_obs(obs if obs is not None else Observability.disabled())
         # Wall-clock (t0, t1) of each launch -- intersect with the farm's
         # busy intervals to measure encode-vs-anneal overlap.
         self._busy: deque = deque(maxlen=4096)
@@ -187,6 +193,51 @@ class EncoderStage:
         self._query_hits = 0
         self._query_misses = 0
         self._params_token = id(params)
+
+    def attach_obs(self, obs) -> None:
+        """Bind (or rebind) the stage to an ``Observability`` bundle.
+
+        Leaf stages start on a private disabled bundle; the serving engine
+        rebinds them to its shared one.  Counter values carry over so a
+        rebind never loses history."""
+        carry = None
+        if self.obs is not None:
+            carry = {
+                "jobs": self._m_jobs.value,
+                "launches": self._m_launches.value,
+                "drains": self._m_drains.value,
+                "tokens": self._m_tokens.value,
+                "busy": self._m_busy.value,
+                "prewarmed": self._m_prewarmed.value,
+            }
+        self.obs = obs
+        reg = obs.registry
+        self._m_jobs = reg.counter(
+            "encoder_jobs_total", "encode jobs completed")
+        self._m_launches = reg.counter(
+            "encoder_launches_total", "jitted embed launches")
+        self._m_drains = reg.counter(
+            "encoder_drains_total", "drain wakeups that executed work")
+        self._m_tokens = reg.counter(
+            "encoder_tokens_total", "real (non-PAD) tokens encoded")
+        self._m_busy = reg.counter(
+            "encoder_busy_seconds_total", "wall seconds inside embed launches")
+        self._m_prewarmed = reg.counter(
+            "encoder_prewarmed_total", "shapes compiled by prewarm()")
+        # Per-workload sec/token: admission reads child.ewma for its encode
+        # estimate (multidoc items are systematically longer than selection
+        # items, so one global EWMA under-charges them).
+        self._m_spt = reg.histogram(
+            "encoder_sec_per_token",
+            "per-launch encode seconds per real token",
+            labels=("workload",))
+        if carry:
+            self._m_jobs.inc(carry["jobs"])
+            self._m_launches.inc(carry["launches"])
+            self._m_drains.inc(carry["drains"])
+            self._m_tokens.inc(carry["tokens"])
+            self._m_busy.inc(carry["busy"])
+            self._m_prewarmed.inc(carry["prewarmed"])
 
     @classmethod
     def tiny(cls, seed: int = 0, **kwargs) -> "EncoderStage":
@@ -202,12 +253,14 @@ class EncoderStage:
 
     # ------------------------------------------------------------------ API
 
-    def submit(self, texts: Sequence[str], *, tag: Optional[int] = None
-               ) -> EncodeFuture:
+    def submit(self, texts: Sequence[str], *, tag: Optional[int] = None,
+               workload: Optional[str] = None) -> EncodeFuture:
         """Enqueue one encode job; returns immediately.
 
         The job's length bucket is a pure function of its own texts, so
-        its embeddings never depend on what else is queued."""
+        its embeddings never depend on what else is queued.  ``workload``
+        labels the job's sec/token observation (see
+        :meth:`estimate_seconds`)."""
         texts = list(texts)
         with self._lock:
             if self._closed:
@@ -224,7 +277,8 @@ class EncoderStage:
                     self.max_len)
         length = min(_bucket(n_tok, MIN_LEN_BUCKET), self.max_len)
         tokens, segs = self.tok.encode_sentences(texts, length)
-        job = _EncodeJob(job_id, len(texts), tokens, segs, n_tok, fut, tag)
+        job = _EncodeJob(job_id, len(texts), tokens, segs, n_tok, fut, tag,
+                         workload)
         with self._cond:
             self._queue.append(job)
             if self._driver is None:
@@ -356,10 +410,21 @@ class EncoderStage:
         for fut in futures:
             fut.wait(timeout)
 
-    def estimate_seconds(self, n_tokens: int) -> float:
-        """Predicted encode seconds for an ``n_tokens`` job (EWMA-based);
-        admission adds this to deadline-feasibility estimates."""
-        return self._ewma_spt * max(n_tokens, 1)
+    def estimate_seconds(self, n_tokens: int,
+                         workload: Optional[str] = None) -> float:
+        """Predicted encode seconds for an ``n_tokens`` job; admission adds
+        this to deadline-feasibility estimates.
+
+        With a ``workload`` label the estimate reads that workload's
+        sec/token EWMA from the registry histogram (populated by
+        :meth:`_run_group`); an unseen workload -- or ``workload=None`` --
+        falls back to the global EWMA."""
+        spt = self._ewma_spt
+        if workload is not None:
+            child = self._m_spt.labels(workload=workload)
+            if child.count:
+                spt = child.ewma
+        return spt * max(n_tokens, 1)
 
     def prewarm(self, *, lengths: Optional[Sequence[int]] = None,
                 batches: Sequence[int] = (BATCH_BUCKET,),
@@ -382,8 +447,7 @@ class EncoderStage:
                     _embed_batch(self.cfg, self.params, tokens, segs,
                                  int(g)).block_until_ready()
                     compiled += 1
-        with self._lock:
-            self._stats.prewarmed += compiled
+        self._m_prewarmed.inc(compiled)
         return compiled
 
     def busy_intervals(self) -> List[Tuple[float, float]]:
@@ -396,11 +460,20 @@ class EncoderStage:
         return time.monotonic() - self._t0
 
     def stats(self) -> EncoderStats:
-        with self._lock:
-            s = dataclasses.replace(self._stats)
-            s.mean_batch = s.jobs / s.launches if s.launches else 0.0
-            s.sec_per_token = self._ewma_spt
-            return s
+        """Registry view: the counters live in ``obs.registry``; this
+        rebuilds the legacy :class:`EncoderStats` shape from them."""
+        jobs = int(self._m_jobs.value)
+        launches = int(self._m_launches.value)
+        return EncoderStats(
+            jobs=jobs,
+            launches=launches,
+            drains=int(self._m_drains.value),
+            tokens=int(self._m_tokens.value),
+            busy_seconds=self._m_busy.value,
+            mean_batch=jobs / launches if launches else 0.0,
+            sec_per_token=self._ewma_spt,
+            prewarmed=int(self._m_prewarmed.value),
+        )
 
     def close(self) -> None:
         """Finish queued work, then stop the drain thread.  Idempotent."""
@@ -442,8 +515,7 @@ class EncoderStage:
                     self._inflight = []
 
     def _run_jobs(self, jobs: List[_EncodeJob]) -> None:
-        with self._lock:
-            self._stats.drains += 1
+        self._m_drains.inc()
         groups: Dict[int, List[_EncodeJob]] = {}
         for job in jobs:
             groups.setdefault(len(job.tokens), []).append(job)
@@ -465,17 +537,25 @@ class EncoderStage:
         t_end = time.monotonic()
         wall = t_end - t_start
         total_tok = sum(j.n_tokens for j in jobs)
+        spt = wall / max(total_tok, 1)
         with self._lock:
             self._busy.append((t_start, t_end))
-            self._stats.launches += 1
-            self._stats.jobs += len(jobs)
-            self._stats.tokens += total_tok
-            self._stats.busy_seconds += wall
-            spt = wall / max(total_tok, 1)
             self._ewma_spt = (spt if self._ewma_spt == 0.0
                               else 0.7 * self._ewma_spt + 0.3 * spt)
+        self._m_launches.inc()
+        self._m_jobs.inc(len(jobs))
+        self._m_tokens.inc(total_tok)
+        self._m_busy.inc(wall)
+        # Per-workload sec/token: one observation per job so a workload's
+        # EWMA tracks the launches it actually rode in.
+        for job in jobs:
+            self._m_spt.labels(
+                workload=job.workload if job.workload else "unlabeled"
+            ).observe(spt)
         done = self.sim_now()
         d = int(self.cfg.d_model)
+        tracer = self.obs.tracer
+        tw1 = tracer.now() if tracer.enabled else 0.0
         for i, job in enumerate(jobs):
             emb = out[i, :job.n_items]
             receipt = EncodeReceipt(
@@ -488,5 +568,21 @@ class EncoderStage:
                 padded_len=length,
                 sim_completed=done,
             )
+            if tracer.enabled:
+                # Receipt values verbatim; the wall window is the shared
+                # launch (tracer clock), the sim window the stage clock.
+                tracer.emit_span(
+                    "encode.job", trace_id=job.tag,
+                    parent=tracer.root_id(job.tag), track="encoder",
+                    t0=tw1 - wall, t1=tw1,
+                    sim_t0=done - wall, sim_t1=done,
+                    job_id=job.job_id, n_items=job.n_items,
+                    n_tokens=job.n_tokens, workload=job.workload,
+                    encoder_seconds=receipt.encoder_seconds,
+                    bytes_h2d=receipt.bytes_h2d,
+                    bytes_d2h=receipt.bytes_d2h,
+                    batch_jobs=receipt.batch_jobs,
+                    padded_len=receipt.padded_len,
+                )
             job.future._receipt = receipt
             job.future._finish(emb, None)

@@ -111,9 +111,30 @@ class FarmHealth:
     cfg: BreakerConfig = field(default_factory=BreakerConfig)
     breakers: List[ChipBreaker] = field(default_factory=list)
 
+    # Metrics handles; bound by attach_obs (plain class attrs, not fields).
+    _m_outcomes = None
+    _m_trips = None
+    _m_quarantined = None
+
     def __post_init__(self):
         if not self.breakers:
             self.breakers = [ChipBreaker(self.cfg) for _ in range(self.n_chips)]
+
+    def attach_obs(self, obs) -> None:
+        """Mirror breaker activity into a metrics registry.  The farm
+        scheduler calls this with its shared ``Observability`` bundle, so
+        per-chip outcomes / trips / quarantine depth show up next to every
+        other serving metric."""
+        reg = obs.registry
+        self._m_outcomes = reg.counter(
+            "chip_drain_outcomes_total",
+            "per-chip drain outcomes folded into breakers",
+            labels=("chip", "outcome"))
+        self._m_trips = reg.counter(
+            "chip_breaker_trips_total", "breaker open transitions per chip",
+            labels=("chip",))
+        self._m_quarantined = reg.gauge(
+            "chips_quarantined", "chips currently quarantined (breaker open)")
 
     # -- views ---------------------------------------------------------
 
@@ -168,7 +189,14 @@ class FarmHealth:
     # -- outcomes ------------------------------------------------------
 
     def record(self, chip: int, outcome: str, now: float) -> None:
-        self.breakers[chip].record(outcome, now)
+        b = self.breakers[chip]
+        trips_before = b.trips
+        b.record(outcome, now)
+        if self._m_outcomes is not None:
+            self._m_outcomes.labels(chip=chip, outcome=outcome).inc()
+            if b.trips > trips_before:
+                self._m_trips.labels(chip=chip).inc()
+            self._m_quarantined.set(len(self.quarantined(now)))
 
     def stats(self, now: float) -> Dict[str, object]:
         states = self.states(now)

@@ -48,9 +48,11 @@ class McmcPoolBackend(ThreadPoolBackend):
         hardware: SolverHardware = MCMC_CMOS,
         mode: str = "sweep",
         sweeps: Optional[int] = None,
+        obs=None,
     ):
         super().__init__(
-            "mcmc", workers=workers, host_power_w=hardware.host_power_w
+            "mcmc", workers=workers, host_power_w=hardware.host_power_w,
+            obs=obs,
         )
         self.hardware = hardware
         self.mode = mode

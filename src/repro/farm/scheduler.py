@@ -132,6 +132,7 @@ from repro.farm.packing import (
 )
 from repro.kernels import ops
 from repro.kernels import ref as kref
+from repro.obs import NULL_SPAN, Observability
 from repro.solvers.base import CapacityHint, SolverResult
 from repro.solvers.cobi import COBI_MAX_SPINS, check_programmable
 
@@ -404,6 +405,7 @@ class CobiFarm:
         faults: Optional[FaultPlan] = None,
         health: object = None,
         validate: Optional[bool] = None,
+        obs=None,
     ):
         if n_chips < 1:
             raise ValueError(f"need >= 1 chip, got {n_chips}")
@@ -447,7 +449,11 @@ class CobiFarm:
             self.health = FarmHealth(n_chips)
         else:
             self.health = None
-        self._fault_counts: Dict[str, int] = {}
+        # Observability: spans from receipts + registry-backed counters.
+        # A standalone farm gets a private disabled bundle; the serving
+        # engine rebinds its shared one via attach_obs().
+        self.obs = None
+        self.attach_obs(obs if obs is not None else Observability.disabled())
         self._ids = itertools.count()
         self._pending: List[FarmJob] = []
         self._jobs: Dict[int, FarmJob] = {}
@@ -457,15 +463,11 @@ class CobiFarm:
         self._errors: Dict[int, BaseException] = {}
         self._sim_time = 0.0
         self._cycle = 0  # global chip-cycle counter
-        self._drains = 0
         # Wall-clock (t0, t1) of recent drain executions: the overlap
         # denominator's counterpart -- an encoder stage intersects these
         # with its own launch intervals to measure encode-vs-anneal
         # concurrency (same time.monotonic domain).
         self._busy_intervals: deque = deque(maxlen=4096)
-        self._completed = 0  # cumulative jobs completed (survives release)
-        self._bytes_h2d = 0
-        self._bytes_d2h = 0
         self._chips = [ChipStats(chip_id=c) for c in range(n_chips)]
         self._lock = threading.RLock()
         self._exec_lock = threading.Lock()  # serializes kernel execution
@@ -480,6 +482,54 @@ class CobiFarm:
         horizon = timer_interval if policy == "timer" else linger
         self._tick = max(1e-3, horizon / 2.0)
         self._debounce = min(5e-3, linger / 2.0)
+
+    def attach_obs(self, obs) -> None:
+        """Bind an :class:`repro.obs.Observability` bundle.
+
+        Receipt-driven spans go to its tracer; the farm's cumulative
+        meters (jobs completed, drains, h2d/d2h bytes, fault counts) live
+        as counters in its metrics registry, and :meth:`stats` is a view
+        over those series.  A standalone farm binds a private disabled
+        bundle at construction; the serving engine rebinds its shared one
+        (before traffic -- cumulative counts carry over regardless).
+        """
+        carry_faults: Dict[str, float] = {}
+        carry = {"jobs": 0.0, "drains": 0.0, "h2d": 0.0, "d2h": 0.0}
+        if self.obs is not None:
+            carry = {"jobs": self._m_jobs.value,
+                     "drains": self._m_drains.value,
+                     "h2d": self._m_h2d.value, "d2h": self._m_d2h.value}
+            carry_faults = {k: c.value for (k,), c in self._m_faults.children()}
+        self.obs = obs
+        reg = obs.registry
+        self._m_jobs = reg.counter(
+            "farm_jobs_total", "jobs completed by the chip farm")
+        self._m_drains = reg.counter(
+            "farm_drains_total", "drain executions")
+        bytes_fam = reg.counter(
+            "farm_bytes_total", "host<->device traffic of drain launches",
+            labels=("direction",))
+        self._m_h2d = bytes_fam.labels(direction="h2d")
+        self._m_d2h = bytes_fam.labels(direction="d2h")
+        self._m_faults = reg.counter(
+            "farm_faults_total", "injected/detected fault events by class",
+            labels=("kind",))
+        self._m_job_latency = reg.histogram(
+            "farm_job_sim_latency_seconds",
+            "submit -> bin completion per job on the sim clock",
+            labels=("policy",)).labels(policy=self.policy)
+        self._m_job_energy = reg.histogram(
+            "farm_job_energy_joules", "chip energy attributed per job")
+        self._m_job_chip_seconds = reg.histogram(
+            "farm_job_chip_seconds", "chip busy time attributed per job")
+        self._m_jobs.inc(carry["jobs"])
+        self._m_drains.inc(carry["drains"])
+        self._m_h2d.inc(carry["h2d"])
+        self._m_d2h.inc(carry["d2h"])
+        for kind, v in carry_faults.items():
+            self._m_faults.labels(kind=kind).inc(v)
+        if self.health is not None:
+            self.health.attach_obs(obs)
 
     # ------------------------------------------------------------------ API
 
@@ -737,21 +787,27 @@ class CobiFarm:
             return list(self._busy_intervals)
 
     def stats(self) -> FarmStats:
+        """Registry view: cumulative meters are read back from the shared
+        metrics registry (see :meth:`attach_obs`), so this dataclass can
+        never drift from what the registry exports."""
         with self._lock:
             quarantined: Tuple[int, ...] = ()
             if self.health is not None:
                 quarantined = tuple(self.health.quarantined(self._sim_time))
+            fault_counts = {k: int(c.value)
+                            for (k,), c in self._m_faults.children()
+                            if c.value}
             return FarmStats(
-                jobs_completed=self._completed,
+                jobs_completed=int(self._m_jobs.value),
                 super_instances=sum(c.solves for c in self._chips),
-                drains=self._drains,
+                drains=int(self._m_drains.value),
                 sim_seconds=self._sim_time,
                 energy_joules=sum(c.busy_seconds for c in self._chips)
                 * self.hardware.solver_power_w,
                 chips=list(self._chips),
-                bytes_h2d=self._bytes_h2d,
-                bytes_d2h=self._bytes_d2h,
-                fault_counts=dict(self._fault_counts),
+                bytes_h2d=int(self._m_h2d.value),
+                bytes_d2h=int(self._m_d2h.value),
+                fault_counts=fault_counts,
                 quarantined=quarantined,
             )
 
@@ -957,7 +1013,7 @@ class CobiFarm:
         with self._lock:
             # Counted up front: a future resolving (per-group commit) must
             # never be observable before the drain that produced it.
-            self._drains += 1
+            self._m_drains.inc()
             self._last_drain = time.monotonic()
         groups: Dict[Tuple[int, float, float, str], List[FarmJob]] = {}
         for job in pending:
@@ -973,8 +1029,12 @@ class CobiFarm:
             )
             for tier_reads, idxs in tiers:
                 tier_jobs = [jobs[i] for i in idxs]
+                gspan = self.obs.tracer.span(
+                    "farm.group", track="farm", sim_t0=self.sim_now(),
+                    jobs=len(tier_jobs), reads=tier_reads, steps=gkey[0],
+                    reduce=gkey[3])
                 try:
-                    self._run_group(tier_reads, gkey, tier_jobs)
+                    self._run_group(tier_reads, gkey, tier_jobs, span=gspan)
                 except BaseException as exc:  # noqa: BLE001 -- never strand futures
                     # Fail THIS group's futures (waiters see the original
                     # error instead of hanging forever).  Plain Exceptions
@@ -984,6 +1044,7 @@ class CobiFarm:
                     # fails every not-yet-run group and propagates
                     # immediately -- a dying drain must not leave ANY of its
                     # dequeued jobs' result() callers hanging.
+                    gspan.set(outcome="error", error=type(exc).__name__)
                     self._fail_jobs(tier_jobs, exc)
                     if not isinstance(exc, Exception):
                         done = {j.job_id for j in tier_jobs}
@@ -995,6 +1056,8 @@ class CobiFarm:
                         raise
                     if first_exc is None:
                         first_exc = exc
+                finally:
+                    gspan.end(sim_t1=self.sim_now())
         with self._lock:
             self._busy_intervals.append((t_exec0, time.monotonic()))
         if first_exc is not None:
@@ -1016,71 +1079,78 @@ class CobiFarm:
                     future._finish()
 
     def _run_group(
-        self, r_tier: int, gkey: Tuple[int, float, float, str], jobs: List[FarmJob]
+        self, r_tier: int, gkey: Tuple[int, float, float, str],
+        jobs: List[FarmJob], span=NULL_SPAN,
     ):
         steps, dt, ks_max, reduce = gkey
-        # Priority/deadline first (urgent jobs reach the earliest chip
-        # cycles), then size-decreasing: best-fit-decreasing within a
-        # priority class packs the lanes measurably denser.
-        order = sorted(
-            jobs,
-            key=lambda j: (-j.priority, j.deadline if j.deadline is not None
-                           else math.inf, -j.ising.n, j.job_id),
-        )
-        bins = pack_instances([(j.job_id, j.ising) for j in order],
-                              capacity=self.lanes_per_chip)
-        by_id = {j.job_id: j for j in jobs}
+        with span.child("farm.pack") as p_pack:
+            # Priority/deadline first (urgent jobs reach the earliest chip
+            # cycles), then size-decreasing: best-fit-decreasing within a
+            # priority class packs the lanes measurably denser.
+            order = sorted(
+                jobs,
+                key=lambda j: (-j.priority, j.deadline if j.deadline is not None
+                               else math.inf, -j.ising.n, j.job_id),
+            )
+            bins = pack_instances([(j.job_id, j.ising) for j in order],
+                                  capacity=self.lanes_per_chip)
+            by_id = {j.job_id: j for j in jobs}
 
-        b_real = len(bins)
-        b_pad = _batch_pad(b_real)
-        L = self.lanes_per_chip
-        slots = [(b, si, slot) for b, inst in enumerate(bins)
-                 for si, slot in enumerate(inst.slots)]
-        hp = np.zeros((b_pad, L), np.float32)
-        jp = np.zeros((b_pad, L, L), np.float32)
-        phi0 = np.zeros((b_pad, r_tier, L), np.float32)
-        for b, inst in enumerate(bins):
-            hp[b] = inst.h_scaled
-            jp[b] = inst.j_scaled
-        # Per-job phases from the job's own key -- results are reproducible
-        # regardless of binmates, tier, or WHICH drain the job landed in
-        # (manual vs any background policy): each job draws at its OWN
-        # bucketed read count (rows past it are inert: zero-phase anneals
-        # excluded by the read budget / slicing).  One launch per distinct
-        # bucket (key count bucketed to keep the jit cache small).
-        by_rj: Dict[int, List[int]] = {}
-        for idx, (b, si, slot) in enumerate(slots):
-            rj = bucket_to(max(by_id[slot.job_id].reads, 1), REPLICA_BUCKET)
-            by_rj.setdefault(rj, []).append(idx)
-        for rj, idxs in sorted(by_rj.items()):
-            keys = [by_id[slots[i][2].job_id].key for i in idxs]
-            # Power-of-two key-count bucket: each row's draw depends only on
-            # its own key, so padding is inert, and background drains (whose
-            # job counts are timing-dependent) stay within a handful of jit
-            # shapes instead of one per distinct count.
-            k_pad = REPLICA_BUCKET
-            while k_pad < len(keys):
-                k_pad *= 2
-            keys += [jax.random.key(0)] * (k_pad - len(keys))
-            draws = np.asarray(_phi0_from_keys(jnp.stack(keys), r=rj, lanes=L))
-            for pos, i in enumerate(idxs):
-                b, _, slot = slots[i]
-                phi0[b, :rj, slot.offset : slot.offset + slot.n] = (
-                    draws[pos, :, : slot.n]
-                )
+            b_real = len(bins)
+            b_pad = _batch_pad(b_real)
+            L = self.lanes_per_chip
+            slots = [(b, si, slot) for b, inst in enumerate(bins)
+                     for si, slot in enumerate(inst.slots)]
+            hp = np.zeros((b_pad, L), np.float32)
+            jp = np.zeros((b_pad, L, L), np.float32)
+            phi0 = np.zeros((b_pad, r_tier, L), np.float32)
+            for b, inst in enumerate(bins):
+                hp[b] = inst.h_scaled
+                jp[b] = inst.j_scaled
+            # Per-job phases from the job's own key -- results are
+            # reproducible regardless of binmates, tier, or WHICH drain the
+            # job landed in (manual vs any background policy): each job
+            # draws at its OWN bucketed read count (rows past it are inert:
+            # zero-phase anneals excluded by the read budget / slicing).
+            # One launch per distinct bucket (key count bucketed to keep
+            # the jit cache small).
+            by_rj: Dict[int, List[int]] = {}
+            for idx, (b, si, slot) in enumerate(slots):
+                rj = bucket_to(max(by_id[slot.job_id].reads, 1), REPLICA_BUCKET)
+                by_rj.setdefault(rj, []).append(idx)
+            for rj, idxs in sorted(by_rj.items()):
+                keys = [by_id[slots[i][2].job_id].key for i in idxs]
+                # Power-of-two key-count bucket: each row's draw depends
+                # only on its own key, so padding is inert, and background
+                # drains (whose job counts are timing-dependent) stay
+                # within a handful of jit shapes instead of one per
+                # distinct count.
+                k_pad = REPLICA_BUCKET
+                while k_pad < len(keys):
+                    k_pad *= 2
+                keys += [jax.random.key(0)] * (k_pad - len(keys))
+                draws = np.asarray(_phi0_from_keys(jnp.stack(keys), r=rj, lanes=L))
+                for pos, i in enumerate(idxs):
+                    b, _, slot = slots[i]
+                    phi0[b, :rj, slot.offset : slot.offset + slot.n] = (
+                        draws[pos, :, : slot.n]
+                    )
+            p_pack.set(bins=b_real, slots=len(slots), batch_pad=b_pad)
 
         # Placement is snapshotted BEFORE the launch (breaker states only
         # move at commit time, and drains serialize on the execution lock,
         # so the snapshot stays valid): healthy chips take the drain's head
         # round-robin, half-open chips get one probe bin each from the
         # tail, open chips get nothing.
-        with self._lock:
-            cycle0 = self._cycle
-            if self.health is not None:
-                chip_of = self.health.schedule(b_real, self._sim_time)
-            else:
-                chip_of = [b % self.n_chips for b in range(b_real)]
-        bin_cycle, _ = _chip_cycles(chip_of)
+        with span.child("farm.place") as p_place:
+            with self._lock:
+                cycle0 = self._cycle
+                if self.health is not None:
+                    chip_of = self.health.schedule(b_real, self._sim_time)
+                else:
+                    chip_of = [b % self.n_chips for b in range(b_real)]
+            bin_cycle, _ = _chip_cycles(chip_of)
+            p_place.set(chips=list(chip_of), cycle0=cycle0)
 
         plan = self.faults
         if plan is not None and plan.drain_timeout(sorted(by_id)):
@@ -1097,37 +1167,42 @@ class CobiFarm:
             with self._lock:
                 self._bill_chips(bins, chip_of, bin_cycle, r_tier)
                 self._count_fault("drain_timeout", len(slots))
+            span.set(outcome="drain_timeout")
             self._fail_jobs(jobs, exc)
             return
 
-        if reduce == "best":
-            results, h2d, d2h = self._execute_fused(
-                bins, slots, by_id, hp, jp, phi0,
-                steps=steps, dt=dt, ks_max=ks_max)
-        else:
-            results, h2d, d2h = self._execute_full(
-                bins, slots, by_id, hp, jp, phi0,
-                steps=steps, dt=dt, ks_max=ks_max)
+        with span.child("farm.launch") as p_launch:
+            if reduce == "best":
+                results, h2d, d2h = self._execute_fused(
+                    bins, slots, by_id, hp, jp, phi0,
+                    steps=steps, dt=dt, ks_max=ks_max)
+            else:
+                results, h2d, d2h = self._execute_full(
+                    bins, slots, by_id, hp, jp, phi0,
+                    steps=steps, dt=dt, ks_max=ks_max)
+            p_launch.set(bytes_h2d=h2d, bytes_d2h=d2h)
 
         # Fault injection + host-side validation, still outside the state
         # lock (pure numpy on this group's local results).
-        faults_by_job: Dict[int, Tuple[str, ...]] = {}
-        failed: Dict[int, BaseException] = {}
-        chip_outcome: Dict[int, str] = {}
-        if plan is not None:
-            self._inject_faults(plan, bins, slots, by_id, chip_of, bin_cycle,
-                                cycle0, results, faults_by_job, failed,
-                                chip_outcome)
-        if self._validate:
-            self._validate_results(bins, slots, by_id, chip_of, results,
-                                   faults_by_job, failed, chip_outcome)
+        with span.child("farm.readout") as p_readout:
+            faults_by_job: Dict[int, Tuple[str, ...]] = {}
+            failed: Dict[int, BaseException] = {}
+            chip_outcome: Dict[int, str] = {}
+            if plan is not None:
+                self._inject_faults(plan, bins, slots, by_id, chip_of,
+                                    bin_cycle, cycle0, results, faults_by_job,
+                                    failed, chip_outcome)
+            if self._validate:
+                self._validate_results(bins, slots, by_id, chip_of, results,
+                                       faults_by_job, failed, chip_outcome)
+            p_readout.set(faulted=len(faults_by_job), failed=len(failed))
 
         with self._lock:
-            self._bytes_h2d += h2d
-            self._bytes_d2h += d2h
+            self._m_h2d.inc(h2d)
+            self._m_d2h.inc(d2h)
             ok = {jid: r for jid, r in results.items() if jid not in failed}
             self._results.update(ok)
-            self._completed += len(ok)
+            self._m_jobs.inc(len(ok))
             self._account(bins, slots, by_id, r_tier, h2d, d2h,
                           chip_of=chip_of, faults=faults_by_job)
             for jid, exc in failed.items():
@@ -1136,6 +1211,11 @@ class CobiFarm:
                 # the receipts table.
                 exc.receipt = self._receipts.pop(jid, None)
                 self._errors[jid] = exc
+                self.obs.tracer.event(
+                    "farm.job.failed", trace_id=by_id[jid].tag,
+                    track=f"chip{getattr(exc, 'chip_id', None)}",
+                    sim_t=self._sim_time, job_id=jid,
+                    kind=type(exc).__name__)
             for kind, jids in _group_fault_kinds(faults_by_job, failed).items():
                 self._count_fault(kind, len(jids))
             if self.health is not None:
@@ -1151,7 +1231,7 @@ class CobiFarm:
 
     def _count_fault(self, kind: str, n: int = 1) -> None:
         if n:
-            self._fault_counts[kind] = self._fault_counts.get(kind, 0) + n
+            self._m_faults.labels(kind=kind).inc(n)
 
     def _inject_faults(self, plan, bins, slots, by_id, chip_of, bin_cycle,
                        cycle0, results, faults_by_job, failed, chip_outcome):
@@ -1374,11 +1454,12 @@ class CobiFarm:
         lanes = [slot.n for _, _, slot in slots]
         job_h2d = _attribute_bytes(h2d, lanes)
         job_d2h = _attribute_bytes(d2h, lanes)
+        tracer = self.obs.tracer
         for k, (b, _, slot) in enumerate(slots):
             job = by_id[slot.job_id]
             inst = bins[b]
             share = slot.n / inst.lanes_used
-            self._receipts[job.job_id] = JobReceipt(
+            receipt = JobReceipt(
                 job_id=job.job_id,
                 chip_id=chip_of[b],
                 cycle=cycle0 + bin_cycle[b],
@@ -1393,6 +1474,30 @@ class CobiFarm:
                 tag=job.tag,
                 faults=faults.get(job.job_id, ()),
             )
+            self._receipts[job.job_id] = receipt
+            self._m_job_latency.observe(receipt.sim_latency_seconds)
+            self._m_job_energy.observe(receipt.energy_joules)
+            self._m_job_chip_seconds.observe(receipt.chip_seconds)
+            if tracer.enabled:
+                # The receipt IS the span's meter set (copied verbatim, so
+                # span sums equal FarmStats meters bit-for-bit); the sim
+                # track shows the bin's occupancy window on its chip.
+                tracer.emit_span(
+                    "farm.job", trace_id=job.tag,
+                    parent=tracer.root_id(job.tag),
+                    track=f"chip{chip_of[b]}",
+                    sim_t0=bin_completion[b] - bin_seconds,
+                    sim_t1=bin_completion[b],
+                    job_id=job.job_id, chip_id=receipt.chip_id,
+                    cycle=receipt.cycle, lanes=receipt.lanes,
+                    bin_occupancy=receipt.bin_occupancy,
+                    sim_latency_seconds=receipt.sim_latency_seconds,
+                    chip_seconds=receipt.chip_seconds,
+                    energy_joules=receipt.energy_joules,
+                    bytes_h2d=receipt.bytes_h2d,
+                    bytes_d2h=receipt.bytes_d2h,
+                    faults=receipt.faults,
+                )
 
 
 def _chip_cycles(chip_of: Sequence[int]) -> Tuple[List[int], int]:

@@ -73,6 +73,15 @@ def main():
     ap.add_argument("--profile", default=None,
                     help="CalibrationProfile JSON for --route (default: "
                          "built-in hardware-constant profile)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(open in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text snapshot of the unified "
+                         "metrics registry at exit")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable span/event tracing (the registry stays "
+                         "live; responses are bit-identical either way)")
     args = ap.parse_args()
 
     admission = (AdmissionConfig(max_queue_depth=args.max_queue_depth)
@@ -91,6 +100,7 @@ def main():
         routing=args.route,
         route_objective=args.route_objective,
         profile=args.profile,
+        tracing=not args.no_trace,
     )
     futures, rejected = [], 0
     for i in range(args.requests):
@@ -117,6 +127,22 @@ def main():
         print(f"{rejected} request(s) shed by admission control")
     if engine.router is not None:
         print(f"router: {engine.router.stats()}")
+    obs = engine.stats()["obs"]
+    print(f"obs: tracing={obs['tracing']} "
+          f"unclosed_spans={obs['unclosed_spans']} "
+          f"dropped_events={obs['dropped_events']}")
+    if args.trace_out:
+        from repro.obs import validate_chrome_trace, write_chrome_trace
+
+        doc = write_chrome_trace(engine.obs.tracer, args.trace_out)
+        print(f"trace: {validate_chrome_trace(doc)} events "
+              f"-> {args.trace_out}")
+    if args.metrics_out:
+        from repro.obs import prometheus_text
+
+        with open(args.metrics_out, "w") as fh:
+            fh.write(prometheus_text(engine.obs.registry))
+        print(f"metrics -> {args.metrics_out}")
     engine.close()
 
 

@@ -62,6 +62,7 @@ from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.farm.packing import estimate_packing, replica_tiers
+from repro.obs import Observability, TraceContext
 
 # Minimum recorded lateness samples before auto_watermark starts widening;
 # below this the quantile is noise.
@@ -134,6 +135,9 @@ class AdmissionTicket:
     backend: Optional[str] = None  # router-chosen backend name (None = default)
     predicted_seconds: float = 0.0  # router-predicted latency incl. queue wait
     sim_at_admit: float = 0.0  # backend sim clock when admitted
+    # Trace propagation: the engine's root-span context rides the ticket so
+    # downstream layers can parent to the request without a side lookup.
+    ctx: Optional[TraceContext] = None
 
 
 @dataclasses.dataclass
@@ -181,6 +185,7 @@ class AdmissionController:
         tier_ratio: float = 2.0,
         router=None,
         chips_available: Optional[Callable[[], int]] = None,
+        obs=None,
     ):
         self.config = config or AdmissionConfig()
         self.lanes_per_chip = lanes_per_chip
@@ -195,9 +200,54 @@ class AdmissionController:
         self.router = router
         self._lock = threading.Lock()
         self._inflight: Dict[int, _Inflight] = {}
-        self._stats = AdmissionStats()
         # realized - estimated completion, most recent requests only.
         self._est_errors: deque = deque(maxlen=256)
+        self.obs = None
+        self.attach_obs(obs if obs is not None else Observability.disabled())
+
+    def attach_obs(self, obs) -> None:
+        """Bind (or rebind) admission counters to an ``Observability``
+        bundle; counter values carry over on rebind."""
+        carry = None
+        if self.obs is not None:
+            carry = {
+                "admitted": self._m_admitted.value,
+                "rejected": self._m_rejected.children(),
+                "degraded": self._m_degraded.value,
+                "evicted": self._m_evicted.value,
+                "spilled": self._m_spilled.value,
+                "peak": self._m_peak.value,
+            }
+        self.obs = obs
+        reg = obs.registry
+        self._m_admitted = reg.counter(
+            "admission_admitted_total", "requests admitted")
+        self._m_rejected = reg.counter(
+            "admission_rejected_total", "requests shed by admission",
+            labels=("reason",))
+        self._m_degraded = reg.counter(
+            "admission_degraded_total", "requests admitted at floored reads")
+        self._m_evicted = reg.counter(
+            "admission_evicted_total",
+            "queued requests evicted to make room")
+        self._m_spilled = reg.counter(
+            "admission_spilled_total",
+            "requests routed off the primary backend at admission")
+        self._m_depth = reg.gauge(
+            "admission_depth", "requests admitted but unfinished")
+        self._m_peak = reg.gauge(
+            "admission_peak_depth", "high-water admitted depth")
+        if carry:
+            self._m_admitted.inc(carry["admitted"])
+            for (reason,), child in carry["rejected"]:
+                if child.value:
+                    self._m_rejected.labels(reason=reason).inc(child.value)
+            self._m_degraded.inc(carry["degraded"])
+            self._m_evicted.inc(carry["evicted"])
+            self._m_spilled.inc(carry["spilled"])
+            self._m_peak.set(max(self._m_peak.value, carry["peak"]))
+        with self._lock:
+            self._m_depth.set(len(self._inflight))
 
     # ------------------------------------------------------------------ API
 
@@ -214,6 +264,7 @@ class AdmissionController:
         iterations: int = 1,
         quality_floor: Optional[float] = None,
         extra_seconds: float = 0.0,
+        ctx: Optional[TraceContext] = None,
     ) -> AdmissionTicket:
         """Gate one request carrying ``len(job_lanes)`` planned solve jobs.
 
@@ -231,7 +282,7 @@ class AdmissionController:
         with self._lock:
             depth = len(self._inflight)
             if cfg.max_queue_depth is not None and depth >= cfg.max_queue_depth:
-                self._stats.rejected += 1
+                self._reject(request_id, "depth", ctx)
                 raise EngineOverloadedError(
                     f"admission queue full: {depth} requests in flight "
                     f"(max_queue_depth={cfg.max_queue_depth})",
@@ -260,13 +311,14 @@ class AdmissionController:
                     job_lanes, eff_reads, degraded, deadline, sim_now,
                     steps=steps, iterations=iterations, watermark=watermark,
                     quality_floor=quality_floor, depth=depth,
+                    request_id=request_id, ctx=ctx,
                 )
                 backend = decision.backend
                 predicted = decision.predicted_seconds
                 work = max(predicted - decision.queue_seconds, 0.0)
                 est = sim_now + predicted
                 if decision.reason == "spill":
-                    self._stats.spilled += 1
+                    self._m_spilled.inc()
             elif (deadline is not None and cfg.deadline_feasibility
                     and self.lanes_per_chip):
                 est = self._estimate_completion_locked(
@@ -280,7 +332,7 @@ class AdmissionController:
                         )
                         degraded = est <= deadline - watermark
                     if est > deadline - watermark:
-                        self._stats.rejected += 1
+                        self._reject(request_id, "deadline", ctx)
                         raise EngineOverloadedError(
                             f"deadline infeasible: estimated completion "
                             f"{est:.6f}s (sim) > deadline {deadline:.6f}s - "
@@ -296,16 +348,25 @@ class AdmissionController:
                 est_completion=est,
                 priority=priority,
             )
-            self._stats.admitted += 1
+            self._m_admitted.inc()
             if degraded:
-                self._stats.degraded += 1
-            self._stats.depth = len(self._inflight)
-            self._stats.peak_depth = max(self._stats.peak_depth,
-                                         self._stats.depth)
+                self._m_degraded.inc()
+            new_depth = len(self._inflight)
+            self._m_depth.set(new_depth)
+            self._m_peak.set(max(self._m_peak.value, new_depth))
+            tracer = self.obs.tracer
+            if tracer.enabled:
+                tracer.event(
+                    "admission.admit", trace_id=request_id,
+                    parent=(ctx.span_id if ctx is not None
+                            else tracer.root_id(request_id)),
+                    track="admission", reads=eff_reads, degraded=degraded,
+                    backend=backend, predicted_seconds=predicted,
+                    est_completion=est, depth=new_depth)
             return AdmissionTicket(
                 request_id, eff_reads, degraded, est,
                 backend=backend, predicted_seconds=predicted,
-                sim_at_admit=sim_now,
+                sim_at_admit=sim_now, ctx=ctx,
             )
 
     def on_done(self, request_id: int,
@@ -319,7 +380,7 @@ class AdmissionController:
         """
         with self._lock:
             rec = self._inflight.pop(request_id, None)
-            self._stats.depth = len(self._inflight)
+            self._m_depth.set(len(self._inflight))
             if (rec is not None and realized is not None
                     and rec.est_completion > 0.0):
                 self._est_errors.append(realized - rec.est_completion)
@@ -329,8 +390,13 @@ class AdmissionController:
         (``shed="evict-lowest"``); releases its admitted work."""
         with self._lock:
             self._inflight.pop(request_id, None)
-            self._stats.evicted += 1
-            self._stats.depth = len(self._inflight)
+            self._m_evicted.inc()
+            self._m_depth.set(len(self._inflight))
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            tracer.event("admission.evict", trace_id=request_id,
+                         parent=tracer.root_id(request_id),
+                         track="admission")
 
     def depth(self) -> int:
         with self._lock:
@@ -343,8 +409,17 @@ class AdmissionController:
             return request_id in self._inflight
 
     def stats(self) -> AdmissionStats:
-        with self._lock:
-            return dataclasses.replace(self._stats)
+        """Registry view: rebuilds the legacy :class:`AdmissionStats` shape
+        from the ``admission_*`` metric families."""
+        return AdmissionStats(
+            admitted=int(self._m_admitted.value),
+            rejected=int(self._m_rejected.total()),
+            degraded=int(self._m_degraded.value),
+            depth=int(self._m_depth.value),
+            peak_depth=int(self._m_peak.value),
+            evicted=int(self._m_evicted.value),
+            spilled=int(self._m_spilled.value),
+        )
 
     def estimate_errors(self) -> dict:
         """Distribution of realized-minus-estimated completion (seconds).
@@ -389,9 +464,21 @@ class AdmissionController:
         # historical estimate misses would have fit inside the margin.
         return wm + late[min(len(late) - 1, int(0.9 * len(late)))]
 
+    def _reject(self, request_id: int, reason: str,
+                ctx: Optional[TraceContext]) -> None:
+        """Count (and trace) one shed request."""
+        self._m_rejected.labels(reason=reason).inc()
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            tracer.event(
+                "admission.reject", trace_id=request_id,
+                parent=(ctx.span_id if ctx is not None
+                        else tracer.root_id(request_id)),
+                track="admission", reason=reason)
+
     def _route_locked(self, job_lanes, eff_reads, degraded, deadline,
                       sim_now, *, steps, iterations, watermark,
-                      quality_floor, depth):
+                      quality_floor, depth, request_id=0, ctx=None):
         """Router-backed feasibility: per-backend predictions over the work
         already admitted; degrade-retry on infeasibility.  Returns
         ``(RouteDecision, eff_reads, degraded)`` or raises."""
@@ -407,7 +494,7 @@ class AdmissionController:
             decision = self.router.decide(
                 jobs, steps=steps, iterations=iterations,
                 deadline_slack=slack, queued_seconds=queued,
-                quality_floor=quality_floor,
+                quality_floor=quality_floor, tag=request_id,
             )
             return decision, eff_reads, degraded
         except InfeasibleRoute as exc:
@@ -417,12 +504,12 @@ class AdmissionController:
                     decision = self.router.decide(
                         floored, steps=steps, iterations=iterations,
                         deadline_slack=slack, queued_seconds=queued,
-                        quality_floor=quality_floor,
+                        quality_floor=quality_floor, tag=request_id,
                     )
                     return decision, cfg.reads_floor, True
                 except InfeasibleRoute:
                     pass
-            self._stats.rejected += 1
+            self._reject(request_id, "deadline", ctx)
             raise EngineOverloadedError(
                 f"no routable backend is feasible with {depth} requests in "
                 f"flight: {exc}",

@@ -95,6 +95,7 @@ from repro.core.pipeline import iter_solve_es, solve_es
 from repro.data.text import split_sentences
 from repro.embeddings import HashedBowEncoder
 from repro.farm import CobiFarm, McmcPoolBackend
+from repro.obs import NULL_SPAN, Observability
 from repro.serving.admission import (
     AdmissionConfig,
     AdmissionController,
@@ -108,7 +109,7 @@ from repro.serving.api import (
     problem_from_embeddings,
 )
 from repro.serving.calibration import CalibrationProfile, default_profile
-from repro.serving.recovery import RecoveryContext, RetryPolicy
+from repro.serving.recovery import RecoveryContext, RequestFailed, RetryPolicy
 from repro.serving.router import BackendRouter, RouterConfig
 from repro.solvers.base import AwaitableFuture, ThreadPoolBackend
 from repro.solvers.cobi import COBI_MAX_SPINS
@@ -199,6 +200,9 @@ class _Work:
     backend_name: Optional[str] = None  # router-chosen backend from the ticket
     predicted_seconds: float = 0.0
     sim_at_admit: float = 0.0  # primary backend clock at admission
+    # Root trace span, opened when the driver adopts the request (stays
+    # NULL_SPAN for queued-cancelled/evicted requests and disabled tracing).
+    span: object = NULL_SPAN
 
 
 class SummarizationEngine:
@@ -223,6 +227,8 @@ class SummarizationEngine:
         health=None,
         retry: Optional[RetryPolicy] = None,
         seed: int = 0,
+        obs=None,
+        tracing: bool = True,
     ):
         """``backend`` injects any :class:`repro.solvers.base.SolverBackend`.
         By default the COBI solver gets a ``CobiFarm(n_chips, policy=policy)``
@@ -261,12 +267,20 @@ class SummarizationEngine:
         self.cfg = solve_cfg or SolveConfig(
             solver="cobi", iterations=6, reads=8, int_range=14
         )
+        # One Observability bundle (tracer + metrics registry + flight
+        # recorder) is shared by every layer; ``tracing=False`` disables the
+        # span path (bit-identical results either way -- tracing never
+        # touches keys, instances, or scheduling) while the registry stays
+        # live because the layers' stats() are views over it.
+        self.obs = obs if obs is not None else Observability(tracing=tracing)
         self.encoder = encoder or HashedBowEncoder()
         # An EncoderStage (submit->future encoder) is the second pipeline
         # stage: _iter_one submits encode jobs and yields while they batch
         # on the stage's drain thread, overlapping other requests' Ising
         # rounds.  A plain encoder (.encode only) runs inline in the driver.
         self.stage = self.encoder if hasattr(self.encoder, "submit") else None
+        if self.stage is not None and hasattr(self.stage, "attach_obs"):
+            self.stage.attach_obs(self.obs)
         self.lam = lam
         self.score = score_against_exact
         self.retry = retry
@@ -278,19 +292,26 @@ class SummarizationEngine:
         if farm is None and backend is None and n_chips > 0 \
                 and self.cfg.solver == "cobi":
             farm = CobiFarm(n_chips, policy=policy, faults=faults,
-                            health=health)
+                            health=health, obs=self.obs)
+        elif farm is not None:
+            # Injected pre-built farm: rebind its metrics/tracing to the
+            # engine's shared bundle (counter values carry over).
+            farm.attach_obs(self.obs)
         self.farm = farm
         if backend is not None:
             self.backend = backend
+            if hasattr(backend, "attach_obs"):
+                backend.attach_obs(self.obs)
         elif farm is not None and self.cfg.solver == "cobi":
             self.backend = farm
         elif self.cfg.solver == "mcmc" and pool_workers > 0:
             # The MCMC solver family serves through its annealer bank so
             # receipts bill the CMOS hardware model, not host watts.
-            self.backend = McmcPoolBackend(workers=pool_workers)
+            self.backend = McmcPoolBackend(workers=pool_workers, obs=self.obs)
         elif self.cfg.solver in _POOL_SOLVERS and pool_workers > 0:
             self.backend = ThreadPoolBackend(self.cfg.solver,
-                                             workers=pool_workers)
+                                             workers=pool_workers,
+                                             obs=self.obs)
         else:
             self.backend = None
         self.router: Optional[BackendRouter] = None
@@ -313,6 +334,7 @@ class SummarizationEngine:
             spill_pool = ThreadPoolBackend(
                 self.cfg.solver, workers=max(pool_workers, 1),
                 host_power_w=profile.model("pool").power_w,
+                obs=self.obs,
             )
             backends = {"farm": self.farm, "pool": spill_pool}
             if "mcmc" in profile.models:
@@ -321,11 +343,13 @@ class SummarizationEngine:
                 # whenever its fitted quality knots clear the quality floor.
                 backends["mcmc"] = McmcPoolBackend(
                     workers=max(profile.model("mcmc").parallelism, 1),
+                    obs=self.obs,
                 )
             self.router = BackendRouter(
                 backends, profile,
                 RouterConfig(objective=route_objective,
                              quality_floor=quality_floor, primary="farm"),
+                obs=self.obs,
             )
         if admission is None:  # default: admit everything, just count it
             admission = AdmissionConfig(deadline_feasibility=False)
@@ -340,6 +364,7 @@ class SummarizationEngine:
             # Health-shrunk capacity flows into the ledger-side completion
             # estimate too, not just the router's live capacity_hint.
             chips_available=getattr(self.backend, "available_chips", None),
+            obs=self.obs,
         )
         self._seed = seed
         self._base_key = jax.random.key(seed)
@@ -463,7 +488,19 @@ class SummarizationEngine:
             out["encoder_stage"] = dataclasses.asdict(self.stage.stats())
         if self.router is not None:
             out["router"] = self.router.stats()
+        tracer = self.obs.tracer
+        out["obs"] = {
+            "tracing": tracer.enabled,
+            "unclosed_spans": tracer.unclosed_spans(),
+            "dropped_events": tracer.dropped,
+        }
         return out
+
+    def metrics_snapshot(self) -> dict:
+        """Plain-dict dump of every registry series (see
+        ``MetricsRegistry.snapshot``); the example service and benchmark
+        reports print from this instead of hand-rolled counters."""
+        return self.obs.registry.snapshot()
 
     def close(self) -> None:
         """Finish queued/in-flight work, stop the driver, close the backend.
@@ -593,7 +630,8 @@ class SummarizationEngine:
             texts = encode_texts(sel.kofn, sel.items)
             if texts:
                 n_tok = 1 + sum(len(t.encode("utf-8")) + 1 for t in texts)
-                extra = self.stage.estimate_seconds(n_tok)
+                extra = self.stage.estimate_seconds(n_tok,
+                                                    workload=sel.workload)
         return self.admission.admit(
             sel.request_id,
             self._estimate_job_lanes(len(sel.items), sel.kofn.m),
@@ -751,12 +789,43 @@ class SummarizationEngine:
         self.admission.on_done(work.req.request_id, realized=realized)
         if response is not None:
             response.degraded = work.degraded
+        if work.span:
+            outcome = "ok" if error is None else type(error).__name__
+            work.span.end(
+                sim_t1=(self.backend.sim_now() if self.backend is not None
+                        else None),
+                outcome=outcome,
+                realized_seconds=(response.realized_seconds
+                                  if response is not None else None),
+            )
+        if isinstance(error, RequestFailed) and not error.flight_log:
+            # Post-mortem payload: the request's last-N trace records.  The
+            # root span was ended above, so its terminal record is in the
+            # ring by the time the dump is cut.
+            error.flight_log = tuple(
+                self.obs.recorder.dump(work.req.request_id))
         work.future._finish(response, error)
 
     def _iter_one(self, work: _Work):
         """Generator serving one request; yields once per backend round."""
         req = work.req
         t0 = time.perf_counter()
+        tracer = self.obs.tracer
+        # Root span per request.  Opened here -- at driver adoption -- not at
+        # admission, so rejected/cancelled/evicted requests never open a span
+        # (no unclosed leak paths); ended in _resolve, the single terminal
+        # path for adopted work.  Phase spans below use emit_span (atomic
+        # open+close), which can never leak even when this generator dies.
+        span = tracer.span(
+            "request", trace_id=req.request_id, track="engine",
+            sim_t0=(self.backend.sim_now() if self.backend is not None
+                    else None),
+            workload=req.workload, n_items=len(req.items),
+            priority=req.priority, backend=work.backend_name,
+            degraded=work.degraded, reads=work.reads,
+        )
+        tracer.register_root(req.request_id, span)
+        work.span = span
         items = req.items
         m = req.kofn.m
         cfg = self.cfg
@@ -774,6 +843,7 @@ class SummarizationEngine:
         enc_seconds = 0.0
         enc_bytes = 0
         enc_power = 0.0
+        t_enc_w0 = tracer.now() if tracer.enabled else 0.0
         if not texts:
             e = None
         elif self.stage is not None:
@@ -786,9 +856,11 @@ class SummarizationEngine:
                 # so cacheable across requests (submit_query's LRU).
                 qfut = self.stage.submit_query(texts[-1],
                                                tag=req.request_id)
-                efut = self.stage.submit(texts[:-1], tag=req.request_id)
+                efut = self.stage.submit(texts[:-1], tag=req.request_id,
+                                         workload=req.workload)
             else:
-                efut = self.stage.submit(texts, tag=req.request_id)
+                efut = self.stage.submit(texts, tag=req.request_id,
+                                         workload=req.workload)
             # Yield to the driver while the stage batches and runs the
             # encode: other requests' Ising rounds keep draining, so encode
             # of this request overlaps anneal of its neighbours.  The short
@@ -816,6 +888,16 @@ class SummarizationEngine:
             enc_seconds = time.perf_counter() - t_enc
             enc_bytes = int(np.asarray(e).nbytes)
             enc_power = self._hardware().host_power_w
+        if tracer.enabled and texts:
+            # Phase marker only: the meters live on the stage's encode.job
+            # spans (receipt values); summing THOSE is what conservation
+            # tests check, so this span carries no meter-named attributes.
+            tracer.emit_span(
+                "request.encode", trace_id=req.request_id,
+                parent=span.ctx.span_id, track="engine",
+                t0=t_enc_w0, t1=tracer.now(),
+                n_texts=len(texts), staged=self.stage is not None,
+            )
         problem = problem_from_embeddings(req.kofn, items, e)
         if problem.n > COBI_MAX_SPINS and not cfg.decompose:
             cfg = dataclasses.replace(cfg, decompose=True)
@@ -841,6 +923,7 @@ class SummarizationEngine:
             recovery = self._recovery_for(backend, eff_deadline, cfg,
                                           req.request_id)
             t_serve0 = backend.sim_now()
+            t_solve_w0 = tracer.now() if tracer.enabled else 0.0
             report = yield from iter_solve_es(
                 problem, work.key, cfg, backend=backend,
                 priority=req.priority, deadline=eff_deadline,
@@ -853,17 +936,52 @@ class SummarizationEngine:
                 if report.sim_completed > 0.0:
                     realized_seconds = max(report.sim_completed - t_serve0,
                                            0.0)
-                if (realized_seconds > 0.0 and work.predicted_seconds > 0.0
+                if report.windows:
+                    # Per-window attribution: every window's realized
+                    # receipts calibrate the backend that actually ran it,
+                    # so spilled windows update the pool's EWMA instead of
+                    # being dropped when the dominant backend differs from
+                    # the admission ticket.
+                    for w in report.windows:
+                        if (w.backend is not None
+                                and w.realized_seconds > 0.0
+                                and w.predicted_seconds > 0.0):
+                            self.router.observe(
+                                w.backend,
+                                predicted_seconds=w.predicted_seconds,
+                                realized_seconds=w.realized_seconds,
+                                realized_energy=w.realized_energy,
+                            )
+                elif (realized_seconds > 0.0 and work.predicted_seconds > 0.0
                         and backend_used == work.backend_name):
-                    # Realized receipts close the loop: the profile's EWMA
-                    # correction learns this backend's live bias.
+                    # Whole-request fallback (no window records): realized
+                    # receipts close the loop on the ticket's backend.
                     self.router.observe(
                         backend_used,
                         predicted_seconds=work.predicted_seconds,
                         realized_seconds=realized_seconds,
                     )
+            if tracer.enabled:
+                tracer.emit_span(
+                    "request.solve", trace_id=req.request_id,
+                    parent=span.ctx.span_id, track="engine",
+                    t0=t_solve_w0, t1=tracer.now(),
+                    sim_t0=t_serve0,
+                    sim_t1=(report.sim_completed
+                            if report.sim_completed > 0.0 else None),
+                    backend=backend_used, windows=len(report.windows),
+                    solver_invocations=report.solver_invocations,
+                )
         else:
+            t_solve_w0 = tracer.now() if tracer.enabled else 0.0
             report = solve_es(problem, work.key, cfg)
+            if tracer.enabled:
+                tracer.emit_span(
+                    "request.solve", trace_id=req.request_id,
+                    parent=span.ctx.span_id, track="engine",
+                    t0=t_solve_w0, t1=tracer.now(),
+                    solver_invocations=report.solver_invocations,
+                )
         hw = self._hardware()
         host_eval = report.solver_invocations * cfg.reads * hw.host_eval_seconds
         metered = report.chip_seconds + report.host_seconds
@@ -945,6 +1063,7 @@ class SummarizationEngine:
             on_failover=on_failover,
             est_job_seconds=cfg.reads * hw.seconds_per_solve,
             request_id=request_id,
+            obs=self.obs,
         )
 
     def _window_route(self, work: _Work, cfg: SolveConfig):
@@ -959,13 +1078,13 @@ class SummarizationEngine:
         def route(n: int, reads: int):
             slack = (None if req.deadline is None
                      else req.deadline - self.backend.sim_now())
-            name, be = self.router.route_window(
+            name, be, predicted = self.router.route_window_info(
                 n, reads, steps=cfg.steps, iterations=cfg.iterations,
-                deadline_slack=slack,
+                deadline_slack=slack, tag=req.request_id,
             )
             deadline = req.deadline
             if deadline is not None and be is not self.backend:
                 deadline = be.sim_now() + max(slack, 0.0)
-            return name, be, deadline
+            return name, be, deadline, predicted
 
         return route

@@ -31,6 +31,7 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.farm.faults import FarmFault
+from repro.obs import Observability
 
 __all__ = ["RetryPolicy", "RecoveryContext", "RequestFailed"]
 
@@ -62,13 +63,18 @@ class RequestFailed(RuntimeError):
 
     def __init__(self, msg: str, *, request_id: Optional[int] = None,
                  attempts: int = 0, faults: Optional[Dict[str, int]] = None,
-                 receipts: Tuple = (), cause: Optional[BaseException] = None):
+                 receipts: Tuple = (), cause: Optional[BaseException] = None,
+                 flight_log: Optional[Tuple] = None):
         super().__init__(msg)
         self.request_id = request_id
         self.attempts = attempts
         self.faults = dict(faults or {})
         self.receipts = tuple(receipts)
         self.cause = cause
+        # Flight-recorder dump: the request's last-N trace records (spans +
+        # events, oldest first), attached by the engine at resolve time when
+        # tracing is enabled; () when it was disabled.
+        self.flight_log = tuple(flight_log or ())
 
 
 class RecoveryContext:
@@ -90,7 +96,8 @@ class RecoveryContext:
                  failover_name: Optional[str] = None,
                  on_failover: Optional[Callable[[], None]] = None,
                  est_job_seconds: float = 0.0,
-                 request_id: Optional[int] = None):
+                 request_id: Optional[int] = None,
+                 obs=None):
         self.policy = policy
         self.clock = clock
         self.deadline = deadline
@@ -99,6 +106,7 @@ class RecoveryContext:
         self.on_failover = on_failover
         self.est_job_seconds = float(est_job_seconds)
         self.request_id = request_id
+        self.obs = obs if obs is not None else Observability.disabled()
         self.retries = 0
         self.failed_over = 0
         self.faults: Dict[str, int] = {}
@@ -106,12 +114,22 @@ class RecoveryContext:
 
     # -- bookkeeping ---------------------------------------------------
 
+    def _event(self, name: str, **attrs) -> None:
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            tracer.event(name, trace_id=self.request_id,
+                         parent=tracer.root_id(self.request_id),
+                         track="recovery", sim_t=self.clock(), **attrs)
+
     def note_fault(self, exc: BaseException) -> None:
         kind = type(exc).__name__
         self.faults[kind] = self.faults.get(kind, 0) + 1
         receipt = getattr(exc, "receipt", None)
         if receipt is not None:
             self.receipts.append(receipt)
+        self._event("recovery.fault", kind=kind,
+                    job_id=getattr(exc, "job_id", None),
+                    chip_id=getattr(exc, "chip_id", None))
 
     @property
     def faults_seen(self) -> int:
@@ -138,11 +156,13 @@ class RecoveryContext:
         if (not failed_over and attempts < self.policy.max_retries
                 and self._budget_ok(attempts)):
             self.retries += 1
+            self._event("recovery.retry", attempt=attempts + 1)
             return None
         if self.policy.failover and self.failover is not None and not failed_over:
             self.failed_over += 1
             if self.on_failover is not None:
                 self.on_failover()
+            self._event("recovery.failover", backend=self.failover_name)
             return self.failover
         raise RequestFailed(
             f"request {self.request_id}: job out of recovery options after "

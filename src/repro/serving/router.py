@@ -31,6 +31,7 @@ import dataclasses
 import threading
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.obs import Observability
 from repro.serving.calibration import BackendCostModel, CalibrationProfile
 
 OBJECTIVES = ("min-energy", "min-latency", "weighted")
@@ -100,6 +101,8 @@ class BackendRouter:
         backends: Dict[str, object],
         profile: CalibrationProfile,
         config: Optional[RouterConfig] = None,
+        *,
+        obs=None,
     ):
         if not backends:
             raise ValueError("router needs at least one backend")
@@ -114,9 +117,36 @@ class BackendRouter:
         if primary not in self.backends:
             raise ValueError(f"primary backend {primary!r} not registered")
         self.primary = primary
-        self._decisions: Dict[str, int] = {n: 0 for n in self.backends}
-        self._spills = 0
-        self._failovers = 0
+        self.obs = None
+        self.attach_obs(obs if obs is not None else Observability.disabled())
+
+    def attach_obs(self, obs) -> None:
+        """Bind (or rebind) routing counters to an ``Observability``
+        bundle; counter values carry over on rebind."""
+        carry = []
+        spills = failovers = 0.0
+        if self.obs is not None:
+            carry = self._m_decisions.children()
+            spills = self._m_spills.value
+            failovers = self._m_failovers.value
+        self.obs = obs
+        reg = obs.registry
+        self._m_decisions = reg.counter(
+            "router_decisions_total", "routing decisions by backend",
+            labels=("backend", "reason"))
+        self._m_spills = reg.counter(
+            "router_spills_total",
+            "decisions where the objective winner failed feasibility")
+        self._m_failovers = reg.counter(
+            "router_failovers_total", "recovery failovers folded in")
+        for (backend, reason), child in carry:
+            if child.value:
+                self._m_decisions.labels(
+                    backend=backend, reason=reason).inc(child.value)
+        if spills:
+            self._m_spills.inc(spills)
+        if failovers:
+            self._m_failovers.inc(failovers)
 
     # --------------------------------------------------------------- route
 
@@ -129,15 +159,18 @@ class BackendRouter:
         deadline_slack: Optional[float] = None,
         queued_seconds: Optional[Dict[str, float]] = None,
         quality_floor: Optional[float] = None,
+        tag: Optional[int] = None,
     ) -> RouteDecision:
         """Pick a backend for one request's ``(n, reads)`` solve jobs.
 
         ``deadline_slack`` is seconds-from-now until the deadline (``None``
         = no deadline); ``queued_seconds`` maps backend name -> predicted
         seconds of already-committed work (the admission layer's view --
-        when omitted, live ``capacity_hint()``s are consulted).  Raises
-        :class:`InfeasibleRoute` when no backend qualifies; admission then
-        degrades or rejects exactly as it would without a router.
+        when omitted, live ``capacity_hint()``s are consulted); ``tag`` is
+        the request id, used only to correlate the decision's trace event.
+        Raises :class:`InfeasibleRoute` when no backend qualifies;
+        admission then degrades or rejects exactly as it would without a
+        router.
         """
         floor = quality_floor if quality_floor is not None \
             else self.config.quality_floor
@@ -168,10 +201,16 @@ class BackendRouter:
             if deadline_slack is not None and lat > deadline_slack - margin:
                 continue
             reason = "objective" if rank == 0 else "spill"
-            with self._lock:
-                self._decisions[name] += 1
-                if reason == "spill":
-                    self._spills += 1
+            self._m_decisions.labels(backend=name, reason=reason).inc()
+            if reason == "spill":
+                self._m_spills.inc()
+            tracer = self.obs.tracer
+            if tracer.enabled:
+                tracer.event(
+                    "router.decide", trace_id=tag,
+                    parent=tracer.root_id(tag), track="router",
+                    backend=name, reason=reason, predicted_seconds=lat,
+                    predicted_energy=energy, queue_seconds=wait)
             return RouteDecision(
                 backend=name, predicted_seconds=lat, predicted_energy=energy,
                 predicted_quality_gap=gap, queue_seconds=wait, reason=reason,
@@ -200,15 +239,45 @@ class BackendRouter:
         when nothing is feasible -- mid-request windows must run somewhere;
         the admission layer already vouched for the request as a whole.
         """
+        name, backend, _ = self.route_window_info(
+            n, reads, steps=steps, iterations=iterations,
+            deadline_slack=deadline_slack, quality_floor=quality_floor)
+        return name, backend
+
+    def route_window_info(
+        self,
+        n: int,
+        reads: int,
+        *,
+        steps: int = 400,
+        iterations: int = 1,
+        deadline_slack: Optional[float] = None,
+        quality_floor: Optional[float] = None,
+        tag: Optional[int] = None,
+    ) -> Tuple[str, object, float]:
+        """:meth:`route_window` plus the decision's predicted seconds.
+
+        The prediction rides the window so its realized receipts can feed
+        ``observe()`` PER WINDOW -- including spilled windows, whose
+        realized/predicted ratio would otherwise never reach the spilled
+        backend's calibration EWMA.  The infeasible fallback still returns
+        the primary's model prediction, so even forced windows calibrate.
+
+        The returned prediction is WORK-ONLY (queue wait stripped): a
+        window's realized side is its metered chip/host seconds, so the
+        calibration ratio must compare like with like.
+        """
         jobs = [(n, reads)] * max(iterations, 1)
         try:
             d = self.decide(jobs, steps=steps, iterations=iterations,
                             deadline_slack=deadline_slack,
-                            quality_floor=quality_floor)
-            name = d.backend
+                            quality_floor=quality_floor, tag=tag)
+            work = max(d.predicted_seconds - d.queue_seconds, 0.0)
+            return d.backend, self.backends[d.backend], work
         except InfeasibleRoute:
-            name = self.primary
-        return name, self.backends[name]
+            model = self.profile.model(self.primary)
+            lat = model.request_seconds(jobs, steps)
+            return self.primary, self.backends[self.primary], lat
 
     # ------------------------------------------------------------ feedback
 
@@ -228,18 +297,20 @@ class BackendRouter:
     def note_failover(self, name: str) -> None:
         """Record a recovery failover onto ``name`` (a job moved there after
         its retry budget ran out -- distinct from an admission-time spill)."""
-        with self._lock:
-            if name in self._decisions:
-                self._decisions[name] += 1
-            self._failovers += 1
+        if name in self.backends:
+            self._m_decisions.labels(backend=name, reason="failover").inc()
+        self._m_failovers.inc()
 
     def stats(self) -> dict:
-        with self._lock:
-            return {
-                "decisions": dict(self._decisions),
-                "spills": self._spills,
-                "failovers": self._failovers,
-            }
+        """Registry view over the ``router_*`` counter families."""
+        decisions = {n: 0 for n in self.backends}
+        for (backend, _reason), child in self._m_decisions.children():
+            decisions[backend] = decisions.get(backend, 0) + int(child.value)
+        return {
+            "decisions": decisions,
+            "spills": int(self._m_spills.value),
+            "failovers": int(self._m_failovers.value),
+        }
 
     # ------------------------------------------------------------ internal
 

@@ -358,11 +358,14 @@ class ThreadPoolBackend:
 
     def __init__(self, solver: str = "tabu", *, workers: int = 4,
                  solve_fn: Optional[Callable[..., SolverResult]] = None,
-                 host_power_w: float = 20.0):
+                 host_power_w: float = 20.0, obs=None):
+        from repro.obs import Observability
+
         self.solver = solver
         self.policy = "pool"
         self.workers = max(1, workers)
         self.host_power_w = host_power_w
+        self.obs = obs if obs is not None else Observability.disabled()
         self._fn = solve_fn if solve_fn is not None else ising_solver(solver)
         self._pool = ThreadPoolExecutor(
             max_workers=self.workers, thread_name_prefix=f"{solver}-pool"
@@ -376,6 +379,13 @@ class ThreadPoolBackend:
         # Observed mean worker seconds per job (EWMA), feeding the
         # capacity_hint queue estimate; 0 until the first job completes.
         self._avg_job_seconds = 0.0
+        reg = self.obs.registry
+        self._m_jobs = reg.counter(
+            "pool_jobs_total", "jobs completed by host pool backends",
+            labels=("solver",)).labels(solver=solver)
+        self._m_secs = reg.histogram(
+            "pool_job_seconds", "measured worker wall seconds per pool job",
+            labels=("solver",)).labels(solver=solver)
 
     def submit(
         self,
@@ -420,6 +430,25 @@ class ThreadPoolBackend:
                     job_id, tag, ising=ising, reads=reads, wall=wall,
                     submitted=submitted, done=done,
                 )
+                self._m_jobs.inc()
+                self._m_secs.observe(wall)
+                tracer = self.obs.tracer
+                if tracer.enabled:
+                    t1 = tracer.now()
+                    tracer.emit_span(
+                        "pool.job", trace_id=tag,
+                        parent=tracer.root_id(tag),
+                        track=f"pool:{self.solver}",
+                        t0=t1 - wall, t1=t1,
+                        sim_t0=submitted, sim_t1=done,
+                        job_id=job_id, n=int(ising.n),
+                        host_seconds=receipt.host_seconds,
+                        chip_seconds=receipt.chip_seconds,
+                        energy_joules=receipt.energy_joules,
+                        bytes_h2d=receipt.bytes_h2d,
+                        bytes_d2h=receipt.bytes_d2h,
+                        sim_latency_seconds=receipt.sim_latency_seconds,
+                    )
                 fut._finish(res, receipt)
             except BaseException as exc:  # noqa: BLE001 -- fail the future
                 fut._finish(error=exc)
